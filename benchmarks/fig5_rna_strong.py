@@ -1,0 +1,28 @@
+"""Paper Figs 5–6: strong scaling of RNA (10% / 50% exchange) and ARNA.
+
+Fixed total particle count distributed over an increasing device count;
+reports absolute wall-clock (Fig 5) and parallel efficiency (Fig 6).
+"""
+from __future__ import annotations
+
+from benchmarks.scaling import device_counts, run_worker
+
+PARTICLES = 1 << 17        # container-scaled stand-in for 38.4M
+
+
+def run(particles: int = PARTICLES) -> list[dict]:
+    rows = []
+    base: dict[str, float] = {}
+    for dra, ratio, tag in [("rna", 0.10, "rna10"), ("rna", 0.50, "rna50"),
+                            ("arna", 0.10, "arna")]:
+        for p in device_counts():
+            r = run_worker(p, dra, particles, exchange_ratio=ratio)
+            t = r["seconds"]
+            if p == 1:
+                base[tag] = t
+            work_ratio = t / base[tag]   # 1-core container: see scaling.py
+            rows.append({"name": f"fig5_{tag}_p{p}",
+                         "us_per_call": t * 1e6,
+                         "derived": (f"work_ratio={work_ratio:.3f},"
+                                     f"rmse={r['rmse']:.3f}")})
+    return rows

@@ -1,0 +1,27 @@
+"""Paper Fig 7: weak scaling of RPA with the three DLB schedulers.
+
+Constant particles per shard (the paper uses 60k per MPI process);
+ideal weak scaling = flat wall-clock as devices grow.
+"""
+from __future__ import annotations
+
+from benchmarks.scaling import device_counts, run_worker
+
+PER_SHARD = 8192           # container-scaled stand-in for 60k/process
+
+
+def run(per_shard: int = PER_SHARD) -> list[dict]:
+    rows = []
+    for sched in ["gs", "sgs", "lgs"]:
+        base = None
+        for p in device_counts():
+            r = run_worker(p, "rpa", per_shard * p, scheduler=sched)
+            t = r["seconds"]
+            base = t if base is None else base
+            # weak scaling on a time-shared core: ideal tP = P·t1
+            ratio = t / (p * base)
+            rows.append({"name": f"fig7_rpa_{sched}_p{p}",
+                         "us_per_call": t * 1e6,
+                         "derived": (f"work_per_shard_ratio={ratio:.3f},"
+                                     f"rmse={r['rmse']:.3f}")})
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Fig 8: strong-scaling parallel efficiency of RPA (GS/SGS/LGS).
+
+Fixed total particles (paper: 3.84M) over increasing device counts.
+"""
+from __future__ import annotations
+
+from benchmarks.scaling import device_counts, run_worker
+
+PARTICLES = 1 << 16        # container-scaled stand-in for 3.84M
+
+
+def run(particles: int = PARTICLES) -> list[dict]:
+    rows = []
+    for sched in ["gs", "sgs", "lgs"]:
+        base = None
+        for p in device_counts():
+            r = run_worker(p, "rpa", particles, scheduler=sched)
+            t = r["seconds"]
+            base = t if base is None else base
+            work_ratio = t / base        # 1-core container: see scaling.py
+            rows.append({"name": f"fig8_rpa_{sched}_p{p}",
+                         "us_per_call": t * 1e6,
+                         "derived": (f"work_ratio={work_ratio:.3f},"
+                                     f"rmse={r['rmse']:.3f}")})
+    return rows

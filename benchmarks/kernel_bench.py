@@ -1,0 +1,61 @@
+"""Kernel-layer microbenchmarks (paper §V.E — likelihood is the hot spot).
+
+Wall-clock timings compare the XLA reference paths at increasing N (the
+paper's O(N·N_pix) → O(N) image-patch claim shows as N-linear scaling
+independent of image size).  Pallas kernels are correctness-validated in
+interpret mode (timing interpret mode is meaningless); their TPU
+performance is modeled in the §Roofline analysis instead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import ref
+
+
+def _bench(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def run() -> list[dict]:
+    key = jax.random.key(0)
+    rows = []
+    # patch likelihood: N-scaling at two image sizes (patch claim)
+    for h in [128, 512]:
+        img = jax.random.normal(jax.random.fold_in(key, h), (h, h))
+        for n in [1 << 14, 1 << 17]:
+            y = jax.random.uniform(key, (n,)) * h
+            x = jax.random.uniform(jax.random.fold_in(key, 1), (n,)) * h
+            i0 = jnp.ones((n,)) * 2
+            f = jax.jit(lambda y, x, i0, img: ref.patch_log_likelihood_ref(
+                y, x, i0, img))
+            dt = _bench(f, y, x, i0, img)
+            rows.append({"name": f"patch_lik_img{h}_n{n}",
+                         "us_per_call": dt * 1e6,
+                         "derived": f"ns_per_particle={dt/n*1e9:.1f}"})
+    # systematic resampling
+    for n in [1 << 14, 1 << 17, 1 << 20]:
+        lw = jax.random.normal(key, (n,))
+        f = jax.jit(lambda lw: ref.systematic_ancestors_ref(
+            lw, jnp.asarray(0.5), lw.shape[0]))
+        dt = _bench(f, lw)
+        rows.append({"name": f"resample_n{n}", "us_per_call": dt * 1e6,
+                     "derived": f"ns_per_particle={dt/n*1e9:.2f}"})
+    # attention reference (serving hot spot)
+    q = jax.random.normal(key, (1, 8, 1024, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 1024, 64))
+    f = jax.jit(lambda q, k: ref.mha_ref(q, k, k, causal=True))
+    dt = _bench(f, q, k)
+    rows.append({"name": "mha_ref_L1024", "us_per_call": dt * 1e6,
+                 "derived": ""})
+    return rows

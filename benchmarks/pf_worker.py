@@ -1,0 +1,69 @@
+"""Subprocess worker for the PF scaling benchmarks.
+
+Runs one (DRA × device-count × particle-count) configuration on a CPU
+device mesh and prints a JSON result line.  Invoked by the fig5/7/8
+harnesses with XLA_FLAGS=--xla_force_host_platform_device_count=<P> so the
+parent process (and every other benchmark) keeps seeing one device.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, required=True)
+    ap.add_argument("--dra", default="rna")
+    ap.add_argument("--scheduler", default="lgs")
+    ap.add_argument("--exchange-ratio", type=float, default=0.10)
+    ap.add_argument("--particles", type=int, required=True)
+    ap.add_argument("--frames", type=int, default=15)
+    ap.add_argument("--img", type=int, default=256)
+    ap.add_argument("--repeats", type=int, default=2)
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices}")
+    import jax
+    import jax.numpy as jnp
+    from repro.core import SIRConfig, ParallelParticleFilter
+    from repro.core.distributed import DRAConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.tracking import TrackingConfig, make_tracking_model
+    from repro.data.synthetic_movie import generate_movie, tracking_rmse
+
+    cfg = TrackingConfig(img_size=(args.img, args.img), v_init=1.5)
+    model = make_tracking_model(cfg)
+    movie = generate_movie(jax.random.key(0), cfg, n_frames=args.frames)
+    mesh = make_host_mesh(args.devices)
+    dra = DRAConfig(kind=args.dra, scheduler=args.scheduler,
+                    exchange_ratio=args.exchange_ratio)
+    pf = ParallelParticleFilter(
+        model=model, sir=SIRConfig(n_particles=args.particles, ess_frac=0.5),
+        dra=dra, mesh=mesh if args.devices > 1 else None)
+
+    def once():
+        res = pf.run(jax.random.key(1), movie.frames)
+        jax.block_until_ready(res.estimates)
+        return res
+
+    res = once()                      # compile + warm
+    t0 = time.time()
+    for _ in range(args.repeats):
+        res = once()
+    dt = (time.time() - t0) / args.repeats
+
+    rmse = float(tracking_rmse(res.estimates, movie.trajectories[:, 0]))
+    print(json.dumps({
+        "devices": args.devices, "dra": args.dra,
+        "scheduler": args.scheduler,
+        "exchange_ratio": args.exchange_ratio,
+        "particles": args.particles, "frames": args.frames,
+        "seconds": dt, "rmse": rmse,
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Aggregate the dry-run JSONs into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRY = os.path.join(REPO, "experiments", "dryrun")
+
+
+def load_cells() -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        with open(f) as fh:
+            d = json.load(fh)
+        parts = os.path.basename(f)[:-5].split("__")
+        d["variant"] = parts[3] if len(parts) > 3 else "baseline"
+        out.append(d)
+    return out
+
+
+def run() -> list[dict]:
+    rows = []
+    for c in load_cells():
+        name = f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}_{c['variant']}"
+        if c.get("status") != "ok" or "roofline" not in c:
+            rows.append({"name": name, "us_per_call": 0,
+                         "derived": c.get("status", "?")})
+            continue
+        r = c["roofline"]
+        rows.append({
+            "name": name,
+            "us_per_call": r["step_lower_bound_s"] * 1e6,
+            "derived": (f"dom={r['dominant']},c={r['compute_s']:.3f},"
+                        f"m={r['memory_s']:.3f},x={r['collective_s']:.3f},"
+                        f"useful={r['useful_ratio']:.2f},"
+                        f"fits={c['memory']['fits_16GB']}"),
+        })
+    return rows
+
+
+def markdown_table(variants: bool = False) -> str:
+    lines = ["| arch | shape | mesh | variant | compute s | memory s "
+             "| collective s | dominant | useful | peak GB | fits |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for c in load_cells():
+        if c["variant"] != "baseline" and not variants:
+            continue
+        v = c["variant"]
+        if c.get("status") == "skipped":
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | {v} "
+                         f"| — | — | — | skipped (full attention @524k) "
+                         f"| — | — | n/a |")
+            continue
+        if c.get("status") != "ok" or "roofline" not in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | {v} "
+                         f"|  |  |  | {c.get('status')} |  |  |  |")
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {v} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {m['peak_per_device']/1e9:.2f} "
+            f"| {m['fits_16GB']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    print(markdown_table(variants="--variants" in sys.argv))

@@ -1,0 +1,52 @@
+"""Shared machinery for the paper-figure scaling benchmarks (Figs 5–8).
+
+Each figure harness spawns ``pf_worker.py`` subprocesses with their own
+``--xla_force_host_platform_device_count`` so this process (and everything
+else in ``benchmarks.run``) keeps its single CPU device.
+
+The paper's 38.4M-particle / 192-core runs are scaled to container size
+(CPU cores, not TPU pods) — the *shape* of the scaling curves and the
+relative ordering of the DRA/DLB variants is the reproduced object, and
+the same harness runs unchanged at full scale on a real mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_worker(devices: int, dra: str, particles: int, *, scheduler="lgs",
+               exchange_ratio=0.10, frames=10, img=128, repeats=2) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    cmd = [sys.executable, os.path.join(REPO, "benchmarks", "pf_worker.py"),
+           "--devices", str(devices), "--dra", dra,
+           "--scheduler", scheduler,
+           "--exchange-ratio", str(exchange_ratio),
+           "--particles", str(particles), "--frames", str(frames),
+           "--img", str(img), "--repeats", str(repeats)]
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                         timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"worker failed: {out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def device_counts(limit: int = 8) -> list[int]:
+    """Virtual host-device counts for the scaling sweeps.
+
+    NOTE: this container exposes a SINGLE physical core, so the P virtual
+    devices timeshare it and wall-clock parallel efficiency cannot be
+    measured directly.  The suites therefore report the *serialized
+    work-ratio* tP/t1 (ideal = 1.0; distributed-resampling communication
+    and imbalance overhead shows as the excess) — the paper's relative
+    ordering claims (RNA10 < RNA50 overhead, LGS < GS/SGS) are the
+    reproduced object.  On a real multi-core/multi-chip mesh the same
+    harness measures true efficiency unchanged.
+    """
+    return [1, 2, 4, 8][: max(1, limit.bit_length())]

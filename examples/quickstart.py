@@ -1,0 +1,32 @@
+"""Quickstart: track a fluorescent spot with the PPF library in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import SIRConfig, ParallelParticleFilter
+from repro.data.synthetic_movie import generate_movie, tracking_rmse
+from repro.models.tracking import TrackingConfig, make_tracking_model
+
+
+def main() -> None:
+    # the paper's imaging model (§VII): Gaussian PSF, SNR 2
+    cfg = TrackingConfig(img_size=(128, 128), v_init=1.0)
+    model = make_tracking_model(cfg)
+    movie = generate_movie(jax.random.key(0), cfg, n_frames=40)
+
+    pf = ParallelParticleFilter(
+        model=model, sir=SIRConfig(n_particles=16384, ess_frac=0.5))
+    result = pf.run(jax.random.key(1), movie.frames)
+
+    rmse = tracking_rmse(result.estimates, movie.trajectories[:, 0],
+                         warmup=10)
+    print(f"tracked {movie.frames.shape[0]} frames; "
+          f"RMSE = {float(rmse):.3f} px "
+          f"(paper reports ~0.063 px at 38.4M particles)")
+    print(f"mean ESS = {float(result.ess.mean()):.0f} / 16384, "
+          f"resampled on {int(result.resampled.sum())} frames")
+
+
+if __name__ == "__main__":
+    main()

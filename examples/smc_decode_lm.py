@@ -1,0 +1,54 @@
+"""The paper's technique applied to LM serving: SMC particle-filter
+decoding (DESIGN.md §5).
+
+K particles per prompt explore with a temperature-flattened proposal;
+importance weights re-target the true model distribution; systematic
+resampling + ancestor-indexed KV-cache gather (the compressed-particles
+move of paper §V) keeps the hypothesis set focused.  The SMC
+log-normalizer reranks continuations for free.
+
+    PYTHONPATH=src python examples/smc_decode_lm.py --arch qwen3-32b \
+        --particles 8 --steps 24
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.lm import model as M
+from repro.serve import SMCDecodeConfig, generate, smc_decode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--particles", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--tau", type=float, default=1.5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = M.init_params(jax.random.key(0), cfg)
+    prompt = jax.random.randint(jax.random.key(1), (2, 16), 0,
+                                cfg.vocab_size)
+
+    smc = SMCDecodeConfig(n_particles=args.particles, steps=args.steps,
+                          proposal_temperature=args.tau)
+    seqs, lw, log_z, ess = smc_decode(params, cfg, prompt, smc,
+                                      key=jax.random.key(2))
+    print(f"SMC decode: {seqs.shape} (B, K, steps)")
+    print(f"per-prompt log-normalizer estimates: {log_z}")
+    print(f"final particle weights (prompt 0): "
+          f"{jnp.round(jax.nn.softmax(lw[0]), 3)}")
+    print(f"mean ESS across steps: {float(ess.mean()):.2f} / "
+          f"{args.particles}")
+    best = jnp.argmax(lw, axis=-1)
+    print(f"best hypothesis per prompt: {best}")
+
+    greedy = generate(params, cfg, prompt, steps=args.steps)
+    print(f"(greedy baseline shape: {greedy.shape})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end LM training driver at laptop scale.
+
+Trains a reduced-width decoder (same code path as the 40-cell dry-run:
+scanned layers, grad accumulation, chunked xent, AdamW, checkpointing with
+resume) on the deterministic synthetic pipeline.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-32b \
+        --steps 200 --batch 8 --seq 128
+"""
+import argparse
+import os
+import time
+
+import jax
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data.tokens import make_batch
+from repro.models.lm import model as M
+from repro.optim import OptConfig, init_opt_state
+from repro.train import TrainConfig, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    opt = OptConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps)
+    tc = TrainConfig(num_microbatches=args.microbatches,
+                     xent_chunk=min(64, args.seq))
+    step_fn = jax.jit(make_train_step(cfg, opt, tc))
+
+    params = M.init_params(jax.random.key(0), cfg)
+    opt_state = init_opt_state(params)
+    start = 0
+
+    resume = latest_step(args.ckpt_dir)
+    if resume is not None:
+        tree = load_checkpoint(args.ckpt_dir, resume,
+                               {"params": params, "opt": opt_state})
+        params, opt_state = tree["params"], tree["opt"]
+        start = resume
+        print(f"resumed from step {resume}")
+
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"{args.arch} (smoke): {n_params:,} params; "
+          f"{args.steps - start} steps to go")
+
+    t0 = time.time()
+    for s in range(start, args.steps):
+        batch = make_batch(0, s, cfg, args.batch, args.seq)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if (s + 1) % 10 == 0:
+            print(f"step {s + 1:4d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.3f}  "
+                  f"lr {float(m['lr']):.2e}", flush=True)
+        if (s + 1) % args.ckpt_every == 0:
+            path = save_checkpoint(args.ckpt_dir, s + 1,
+                                   {"params": params, "opt": opt_state})
+            print(f"checkpointed → {path}")
+    dt = time.time() - t0
+    steps_done = max(args.steps - start, 1)
+    print(f"done: {dt / steps_done * 1e3:.0f} ms/step")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""PPF core: particle ensembles, resampling, DLB scheduling, compression,
+distributed resampling algorithms, and SIR/ASIR drivers."""
+from repro.core.particles import (ParticleEnsemble, effective_sample_size,
+                                  normalized_weights, weighted_mean)
+from repro.core.smc import SIRConfig, StateSpaceModel, make_sir_step, run_sir
+from repro.core.distributed import DRAConfig
+from repro.core.filters import FilterResult, ParallelParticleFilter
+
+__all__ = [
+    "ParticleEnsemble", "effective_sample_size", "normalized_weights",
+    "weighted_mean", "SIRConfig", "StateSpaceModel", "make_sir_step",
+    "run_sir", "DRAConfig", "FilterResult", "ParallelParticleFilter",
+]

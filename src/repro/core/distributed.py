@@ -1,0 +1,271 @@
+"""Distributed resampling algorithms (paper §III) as SPMD shard programs.
+
+Four DRA families, exactly the paper's taxonomy:
+
+* **MPF**  — bank of independent PFs; zero particle communication; global
+  estimate combined from per-shard aggregate weights (one tiny psum).
+* **RNA**  — fixed per-shard particle count, local resampling, static ring
+  exchange of a fixed fraction of particles (paper's 10%–50%) via
+  ``ppermute`` — the direct TPU translation of the MPI ring.
+* **ARNA** — RNA with the exchange ratio adapted from the *effective number
+  of processes* P_eff = (Σ W_i)²/Σ W_i², and maximal re-mixing (fused
+  ``all_to_all`` shuffle) when the target is lost (the paper randomizes the
+  ring order; a static-shape SPMD program cannot re-wire ``ppermute`` at
+  runtime, so we substitute the strictly-stronger full shuffle — DESIGN.md §2).
+* **RPA**  — stratified resampling with proportional allocation across
+  shards, followed by DLB routing (GS/SGS/LGS from ``repro.core.dlb``) of
+  compressed particles.
+
+All functions here are *per-shard* programs: they use collectives with an
+``axis_name`` and are meant to be called inside ``shard_map`` (see
+``repro.core.filters`` for the user-facing driver).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dlb
+from repro.core import resampling
+from repro.core.particles import log_sum_weights
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAConfig:
+    """Distributed-resampling configuration (paper §III–§V knobs)."""
+
+    kind: str = "rna"               # mpf | rna | arna | rpa
+    resampler: str = "systematic"
+    ess_frac: float = 0.5            # N_threshold = ess_frac * N (Alg. 1)
+    # RNA / ARNA
+    exchange_ratio: float = 0.10     # paper's 10%–50%
+    q_min: float = 0.05              # ARNA adaptive range
+    q_max: float = 0.50
+    lost_log_lik: float = -1e4       # "target lost" likelihood floor (ARNA)
+    # RPA
+    scheduler: str = "lgs"           # gs | sgs | lgs
+    k_cap: int = 64                  # routing window (unique particles/dest)
+    slack: float = 2.0               # per-shard allocation cap = slack * C
+
+    def __post_init__(self):
+        assert self.kind in ("mpf", "rna", "arna", "rpa"), self.kind
+        assert self.scheduler in dlb.SCHEDULERS, self.scheduler
+        assert self.resampler in resampling.RESAMPLERS, self.resampler
+
+
+def _axis_size(axis_name: str) -> int:
+    return jax.lax.axis_size(axis_name)
+
+
+def _shard_log_z(log_weights: Array, axis_name: str) -> tuple[Array, Array]:
+    """(local logZ, gathered (P,) vector of all shards' logZ)."""
+    local = log_sum_weights(log_weights)
+    return local, jax.lax.all_gather(local, axis_name)
+
+
+def global_log_z(log_weights: Array, axis_name: str) -> Array:
+    _, gathered = _shard_log_z(log_weights, axis_name)
+    return jax.scipy.special.logsumexp(gathered)
+
+
+def global_ess(log_weights: Array, axis_name: str) -> Array:
+    """Global N_eff (Alg. 1 line 15) with one psum."""
+    glz = global_log_z(log_weights, axis_name)
+    sq = jnp.sum(jnp.exp(2.0 * (log_weights - glz)), where=jnp.isfinite(log_weights))
+    return 1.0 / jnp.maximum(jax.lax.psum(sq, axis_name), 1e-38)
+
+
+def effective_processes(log_weights: Array, axis_name: str) -> Array:
+    """P_eff = (Σ_i W_i)² / Σ_i W_i² over shard aggregate weights (ARNA)."""
+    local, gathered = _shard_log_z(log_weights, axis_name)
+    del local
+    lw = gathered - jax.scipy.special.logsumexp(gathered)
+    w = jnp.exp(lw)
+    return 1.0 / jnp.maximum(jnp.sum(jnp.square(w)), 1e-38)
+
+
+# ---------------------------------------------------------------------------
+# Local resample (shared by all DRAs)
+# ---------------------------------------------------------------------------
+
+def _local_resample_materialize(key: Array, state: Any, log_weights: Array,
+                                n_out, cfg: DRAConfig) -> tuple[Any, Array]:
+    """Resample ``n_out`` offspring locally and materialize ``C`` slots.
+
+    Returns (state, counts).  Offspring counts follow the configured local
+    scheme; materialization (counts → replicas) is the paper's deferred
+    expansion, done here because no routing follows (MPF/RNA path).
+    """
+    c = log_weights.shape[0]
+    counts_fn = resampling.RESAMPLERS[cfg.resampler]
+    counts = counts_fn(key, log_weights, n_out, capacity=c)
+    ancestors = resampling.counts_to_ancestors(counts, c)
+    new_state = jax.tree_util.tree_map(lambda x: x[ancestors], state)
+    return new_state, counts
+
+
+# ---------------------------------------------------------------------------
+# The four DRA resample+rebalance programs
+# ---------------------------------------------------------------------------
+
+def mpf_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
+                 axis_name: str) -> tuple[Any, Array, dict]:
+    """Independent local resampling; shard keeps its aggregate weight."""
+    c = log_weights.shape[0]
+    local_lz, gathered = _shard_log_z(log_weights, axis_name)
+    glz = jax.scipy.special.logsumexp(gathered)
+    state, _ = _local_resample_materialize(key, state, log_weights, c, cfg)
+    # each offspring carries Ŵ_i / C of the global posterior mass
+    lw = jnp.full((c,), local_lz - glz - jnp.log(c))
+    return state, lw, {"exchanged": jnp.zeros((), jnp.int32)}
+
+
+def _ring_exchange(state: Any, log_weights: Array, m_buf: int, m_valid: Array,
+                   axis_name: str, shuffle: Array | None = None):
+    """Exchange the first ``m_buf`` slots with the ring neighbor; only the
+    first ``m_valid``(≤ m_buf, global scalar) received slots are accepted.
+
+    If ``shuffle`` is true (ARNA lost-mode), use a fused all_to_all perfect
+    shuffle instead of the ring (maximal information mixing).
+    """
+    p = _axis_size(axis_name)
+    perm = [(i, (i + 1) % p) for i in range(p)]
+
+    def take(x):
+        return x[:m_buf]
+
+    send_state = jax.tree_util.tree_map(take, state)
+    send_lw = log_weights[:m_buf]
+
+    def ring(args):
+        s, lw = args
+        r_s = jax.tree_util.tree_map(
+            lambda x: jax.lax.ppermute(x, axis_name, perm), s)
+        r_lw = jax.lax.ppermute(lw, axis_name, perm)
+        return r_s, r_lw
+
+    def mix(args):
+        s, lw = args
+        b = m_buf // p
+
+        def a2a(x):
+            y = x[: b * p].reshape((p, b) + x.shape[1:])
+            y = jax.lax.all_to_all(y, axis_name, split_axis=0, concat_axis=0)
+            y = y.reshape((b * p,) + x.shape[1:])
+            return jnp.concatenate([y, x[b * p:]], axis=0)
+
+        return jax.tree_util.tree_map(a2a, s), a2a(lw)
+
+    if shuffle is None:
+        recv_state, recv_lw = ring((send_state, send_lw))
+    else:
+        recv_state, recv_lw = jax.lax.cond(shuffle, mix, ring,
+                                           (send_state, send_lw))
+
+    keep = jnp.arange(m_buf) < m_valid
+
+    def splice(orig, recv):
+        head = jnp.where(
+            keep.reshape((-1,) + (1,) * (recv.ndim - 1)), recv, orig[:m_buf])
+        return jnp.concatenate([head, orig[m_buf:]], axis=0)
+
+    out_state = jax.tree_util.tree_map(splice, state, recv_state)
+    out_lw = splice(log_weights, recv_lw)
+    return out_state, out_lw
+
+
+def rna_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
+                 axis_name: str) -> tuple[Any, Array, dict]:
+    """RNA: local resample to C, then static ring exchange of a fixed
+    fraction (paper §III / §VII.D)."""
+    c = log_weights.shape[0]
+    local_lz, gathered = _shard_log_z(log_weights, axis_name)
+    glz = jax.scipy.special.logsumexp(gathered)
+    k_res, k_perm = jax.random.split(key)
+    state, _ = _local_resample_materialize(k_res, state, log_weights, c, cfg)
+    lw = jnp.full((c,), local_lz - glz - jnp.log(c))
+    # randomize which particles travel (systematic ancestors are ordered)
+    order = jax.random.permutation(k_perm, c)
+    state = jax.tree_util.tree_map(lambda x: x[order], state)
+    lw = lw[order]
+    m = max(int(round(cfg.exchange_ratio * c)), 1)
+    state, lw = _ring_exchange(state, lw, m, jnp.asarray(m), axis_name)
+    return state, lw, {"exchanged": jnp.asarray(m, jnp.int32)}
+
+
+def arna_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
+                  axis_name: str, max_log_lik: Array) -> tuple[Any, Array, dict]:
+    """ARNA: RNA with P_eff-adaptive exchange ratio and lost-mode shuffle."""
+    c = log_weights.shape[0]
+    p = _axis_size(axis_name)
+    p_eff = effective_processes(log_weights, axis_name)
+    local_lz, gathered = _shard_log_z(log_weights, axis_name)
+    glz = jax.scipy.special.logsumexp(gathered)
+
+    k_res, k_perm = jax.random.split(key)
+    state, _ = _local_resample_materialize(k_res, state, log_weights, c, cfg)
+    lw = jnp.full((c,), local_lz - glz - jnp.log(c))
+    order = jax.random.permutation(k_perm, c)
+    state = jax.tree_util.tree_map(lambda x: x[order], state)
+    lw = lw[order]
+
+    # adaptive ratio: all shards tracking (P_eff≈P) → q_min; collapsed → q_max
+    frac_eff = jnp.clip(p_eff / p, 0.0, 1.0)
+    q = cfg.q_min + (cfg.q_max - cfg.q_min) * (1.0 - frac_eff)
+    m_buf = max(int(round(cfg.q_max * c)) // p * p, p)  # static buffer, P-divisible
+    m_valid = jnp.ceil(q * c).astype(jnp.int32)
+    m_valid = jnp.minimum(m_valid, m_buf)
+
+    lost = jax.lax.pmax(max_log_lik, axis_name) < cfg.lost_log_lik
+    state, lw = _ring_exchange(state, lw, m_buf, m_valid, axis_name,
+                               shuffle=lost)
+    return state, lw, {
+        "exchanged": m_valid,
+        "p_eff": p_eff,
+        "q": q,
+        "lost": lost.astype(jnp.int32),
+    }
+
+
+def rpa_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
+                 axis_name: str) -> tuple[Any, Array, dict]:
+    """RPA: proportional allocation across shards + DLB routing of
+    compressed particles (paper §III–§V)."""
+    c = log_weights.shape[0]
+    p = _axis_size(axis_name)
+    my = jax.lax.axis_index(axis_name)
+    n_total = c * p
+    cap_units = int(round(cfg.slack * c))
+
+    # --- stratified proportional allocation over shards (identical everywhere)
+    _, gathered_lz = _shard_log_z(log_weights, axis_name)
+    alloc = dlb.proportional_allocation(gathered_lz, n_total, cap_units)  # (P,)
+
+    # --- local resampling of my allocation, in compressed (counts) form
+    counts_fn = resampling.RESAMPLERS[cfg.resampler]
+    counts = counts_fn(key, log_weights, alloc[my], capacity=cap_units)  # (C,)
+
+    # --- DLB schedule from the globally known allocation vector
+    targets = dlb.balanced_targets(jnp.asarray(n_total), p)
+    schedule = dlb.SCHEDULERS[cfg.scheduler](alloc, targets)  # (P, P)
+    row_send = schedule[my]
+
+    # --- route compressed particles, then expand locally (deferred creation)
+    route = dlb.route_compressed(state, counts, jnp.zeros((c,)), row_send,
+                                 k_cap=cfg.k_cap, axis_name=axis_name)
+    out_state, _, valid = dlb.merge_routed(state, jnp.zeros((c,)),
+                                           route.kept_counts, route, c)
+    # post-resample weights: every survivor represents 1/N of the posterior
+    lw = jnp.where(valid, -jnp.log(n_total), -jnp.inf)
+    stats = dlb.schedule_stats(schedule)
+    return out_state, lw, {
+        "overflow": jax.lax.psum(route.overflow_units, axis_name),
+        "links": stats["links"],
+        "units_moved": stats["units_moved"],
+        "max_message_units": stats["max_message_units"],
+    }

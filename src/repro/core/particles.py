@@ -1,0 +1,110 @@
+"""Particle ensembles and weight algebra.
+
+The fundamental data structure of the PPF library (paper §VI, *particle*
+module): a fixed-capacity, SPMD-friendly ensemble of weighted particles.
+
+All weights are carried in log-space for numerical robustness; the paper's
+Java implementation uses linear weights, which underflow for large N — this
+is one of the deliberate "hardware adaptation" changes recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ParticleEnsemble:
+    """A weighted particle ensemble with static capacity.
+
+    Attributes:
+      state: pytree of arrays, each with leading dim ``N`` (capacity).
+      log_weights: ``(N,)`` unnormalized log-weights.  Slots that are
+        "empty" (RPA under-allocation) carry ``-inf``.
+      counts: ``(N,)`` int32 multiplicities — the *compressed particles*
+        representation of paper §V.  A materialized (uncompressed) ensemble
+        has ``counts == 1`` everywhere.  ``sum(counts * (log_weights > -inf))``
+        is the logical particle count.
+    """
+
+    state: Any
+    log_weights: Array
+    counts: Array
+
+    @property
+    def capacity(self) -> int:
+        return self.log_weights.shape[0]
+
+    def replace(self, **kw) -> "ParticleEnsemble":
+        return dataclasses.replace(self, **kw)
+
+
+def init_ensemble(key: Array, sampler, n: int, state_dim: int | None = None) -> ParticleEnsemble:
+    """Draw ``n`` particles from ``sampler(key, n)`` with uniform weights."""
+    state = sampler(key, n)
+    return ParticleEnsemble(
+        state=state,
+        log_weights=jnp.zeros((n,), jnp.float32),
+        counts=jnp.ones((n,), jnp.int32),
+    )
+
+
+def normalized_weights(log_weights: Array, counts: Array | None = None) -> Array:
+    """Linear, normalized weights.  Multiplicities scale the weights."""
+    lw = log_weights
+    if counts is not None:
+        lw = lw + jnp.log(jnp.maximum(counts, 1).astype(lw.dtype)) + jnp.where(counts > 0, 0.0, -jnp.inf)
+    m = jnp.max(lw)
+    # Guard the all -inf corner (empty ensemble): produce uniform weights.
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    w = jnp.exp(lw - m)
+    s = jnp.sum(w)
+    return jnp.where(s > 0, w / s, jnp.ones_like(w) / w.shape[0])
+
+
+def log_sum_weights(log_weights: Array, counts: Array | None = None) -> Array:
+    """log(sum of linear weights) — the local normalization constant.
+
+    This is the per-shard statistic all-reduced by the distributed
+    resampling algorithms (paper §III) to form the global posterior
+    normalization.
+    """
+    lw = log_weights
+    if counts is not None:
+        lw = lw + jnp.where(counts > 0, jnp.log(jnp.maximum(counts, 1).astype(lw.dtype)), -jnp.inf)
+    return jax.scipy.special.logsumexp(lw)
+
+
+def effective_sample_size(log_weights: Array, counts: Array | None = None) -> Array:
+    """N_eff = 1 / sum_i w_i^2  (Alg. 1 line 15), weight-normalized."""
+    w = normalized_weights(log_weights, counts)
+    return 1.0 / jnp.sum(jnp.square(w))
+
+
+def weighted_mean(ensemble: ParticleEnsemble) -> Any:
+    """MMSE state estimate (paper §II): E[x] under the weighted ensemble."""
+    w = normalized_weights(ensemble.log_weights, ensemble.counts)
+
+    def _mean(x):
+        return jnp.tensordot(w.astype(x.dtype), x, axes=1)
+
+    return jax.tree_util.tree_map(_mean, ensemble.state)
+
+
+def map_estimate(ensemble: ParticleEnsemble) -> Any:
+    """MAP state estimate: the highest-weight particle."""
+    lw = ensemble.log_weights
+    i = jnp.argmax(lw)
+    return jax.tree_util.tree_map(lambda x: x[i], ensemble.state)
+
+
+def logical_size(ensemble: ParticleEnsemble) -> Array:
+    """Number of logical (multiplicity-expanded) particles."""
+    valid = jnp.isfinite(ensemble.log_weights)
+    return jnp.sum(jnp.where(valid, ensemble.counts, 0))

@@ -1,0 +1,153 @@
+"""Local resampling algorithms (paper Alg. 1, line 17).
+
+Four classical schemes.  Each has two output forms:
+
+* ``*_ancestors``: ``(n_out,)`` int32 ancestor indices — the materialized
+  form used by single-device SIR.
+* ``*_counts``: ``(n_in,)`` int32 multiplicities — the *compressed
+  particles* form (paper §V): how many offspring each input particle
+  spawns.  ``sum(counts) == n_out``.  Routing in the distributed
+  resamplers moves counts, never replicas.
+
+``counts_to_ancestors`` / ``ancestors_to_counts`` convert between the two
+losslessly (up to offspring ordering, which is exchangeable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.particles import normalized_weights
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Representation conversions (compression layer contract)
+# ---------------------------------------------------------------------------
+
+def counts_to_ancestors(counts: Array, n_out: int) -> Array:
+    """Expand multiplicities to ancestor indices.
+
+    ``jnp.repeat`` with a static total length keeps SPMD shapes fixed; if
+    ``sum(counts) < n_out`` the tail is padded with the last valid index
+    (callers track logical size separately).
+    """
+    n_in = counts.shape[0]
+    return jnp.repeat(jnp.arange(n_in, dtype=jnp.int32), counts, total_repeat_length=n_out)
+
+
+def ancestors_to_counts(ancestors: Array, n_in: int) -> Array:
+    """Histogram ancestor indices back to multiplicities."""
+    return jnp.zeros((n_in,), jnp.int32).at[ancestors].add(1)
+
+
+# ---------------------------------------------------------------------------
+# Comb-based schemes (systematic / stratified) — shared machinery
+# ---------------------------------------------------------------------------
+
+def _comb_counts(weights: Array, u: Array, n_out: Array | int, capacity: int) -> Array:
+    """Offspring counts for a comb of ``n_out`` points with offsets ``u``.
+
+    ``u`` is either a scalar (systematic) or ``(capacity,)`` (stratified)
+    uniform in [0,1).  ``n_out`` may be a *traced* scalar ≤ ``capacity`` —
+    this is what lets RPA allocate a data-dependent number of offspring per
+    shard while every shape stays static (DESIGN.md §2.1).
+    """
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-38)
+    cdf = jnp.cumsum(w)
+    n_out_f = jnp.asarray(n_out, jnp.float32)
+    pts = (jnp.arange(capacity, dtype=jnp.float32) + u) / jnp.maximum(n_out_f, 1.0)
+    valid = jnp.arange(capacity) < n_out
+    # searchsorted over the CDF: ancestor of comb point p is the first index
+    # whose cumulative weight exceeds p.
+    anc = jnp.searchsorted(cdf, jnp.where(valid, pts, 2.0), side="right")
+    anc = jnp.clip(anc, 0, weights.shape[0] - 1).astype(jnp.int32)
+    counts = jnp.zeros((weights.shape[0],), jnp.int32)
+    counts = counts.at[jnp.where(valid, anc, weights.shape[0] - 1)].add(
+        jnp.where(valid, 1, 0)
+    )
+    return counts
+
+
+def systematic_counts(key: Array, log_weights: Array, n_out, capacity: int | None = None) -> Array:
+    """Systematic resampling — a single shared uniform offset."""
+    capacity = capacity or log_weights.shape[0]
+    w = normalized_weights(log_weights)
+    u = jax.random.uniform(key, ())
+    return _comb_counts(w, u, n_out, capacity)
+
+
+def stratified_counts(key: Array, log_weights: Array, n_out, capacity: int | None = None) -> Array:
+    """Stratified resampling — one uniform per stratum."""
+    capacity = capacity or log_weights.shape[0]
+    w = normalized_weights(log_weights)
+    u = jax.random.uniform(key, (capacity,))
+    return _comb_counts(w, u, n_out, capacity)
+
+
+def multinomial_counts(key: Array, log_weights: Array, n_out, capacity: int | None = None) -> Array:
+    """Multinomial resampling via inverse-CDF of sorted uniforms.
+
+    Uses the exponential-spacings trick to generate sorted uniforms in O(n)
+    so a single searchsorted pass suffices (the paper's *tools* module sorts
+    explicitly; this is the allocation-free equivalent).
+    """
+    capacity = capacity or log_weights.shape[0]
+    w = normalized_weights(log_weights)
+    # sorted U[0,1) variates via exponential spacings.  The normalizer must
+    # be the sum of the first n_out+1 spacings (n_out may be traced and
+    # < capacity); dividing by the full sum would bias the first n_out
+    # order statistics toward 0.
+    e = jax.random.exponential(key, (capacity + 1,))
+    cs = jnp.cumsum(e)
+    denom = cs[jnp.clip(jnp.asarray(n_out, jnp.int32), 1, capacity)]
+    sorted_u = cs[:-1] / denom
+    return _multinomial_from_sorted(w, sorted_u, n_out, capacity)
+
+
+def _multinomial_from_sorted(w: Array, sorted_u: Array, n_out, capacity: int) -> Array:
+    cdf = jnp.cumsum(w / jnp.maximum(jnp.sum(w), 1e-38))
+    valid = jnp.arange(capacity) < n_out
+    anc = jnp.searchsorted(cdf, jnp.where(valid, sorted_u, 2.0), side="right")
+    anc = jnp.clip(anc, 0, w.shape[0] - 1).astype(jnp.int32)
+    counts = jnp.zeros((w.shape[0],), jnp.int32)
+    return counts.at[jnp.where(valid, anc, w.shape[0] - 1)].add(jnp.where(valid, 1, 0))
+
+
+def residual_counts(key: Array, log_weights: Array, n_out, capacity: int | None = None) -> Array:
+    """Residual resampling: deterministic floor(n·w) copies + multinomial rest."""
+    capacity = capacity or log_weights.shape[0]
+    w = normalized_weights(log_weights)
+    n_out_f = jnp.asarray(n_out, jnp.float32)
+    det = jnp.floor(n_out_f * w).astype(jnp.int32)
+    n_det = jnp.sum(det)
+    resid = n_out_f * w - det.astype(jnp.float32)
+    resid_lw = jnp.log(jnp.maximum(resid, 1e-38))
+    rest = multinomial_counts(key, resid_lw, jnp.asarray(n_out, jnp.int32) - n_det, capacity)
+    return det + rest
+
+
+# ---------------------------------------------------------------------------
+# Ancestor-form wrappers (single-device SIR path)
+# ---------------------------------------------------------------------------
+
+def _as_ancestors(counts_fn):
+    def f(key: Array, log_weights: Array, n_out: int) -> Array:
+        counts = counts_fn(key, log_weights, n_out, capacity=max(n_out, log_weights.shape[0]))
+        return counts_to_ancestors(counts, n_out)
+
+    return f
+
+
+systematic_ancestors = _as_ancestors(systematic_counts)
+stratified_ancestors = _as_ancestors(stratified_counts)
+multinomial_ancestors = _as_ancestors(multinomial_counts)
+residual_ancestors = _as_ancestors(residual_counts)
+
+RESAMPLERS = {
+    "systematic": systematic_counts,
+    "stratified": stratified_counts,
+    "multinomial": multinomial_counts,
+    "residual": residual_counts,
+}

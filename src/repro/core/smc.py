@@ -1,0 +1,159 @@
+"""Sequential importance resampling (paper Alg. 1) — single-device and
+per-shard SPMD step builders.
+
+The step builders return functions suitable for ``jax.lax.scan`` over a
+sequence of observations (frames).  The distributed builder is a *per-shard*
+program (collectives by ``axis_name``) to be wrapped in ``shard_map`` by
+``repro.core.filters``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed as dist
+from repro.core import resampling
+from repro.core.particles import (effective_sample_size, normalized_weights)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSpaceModel:
+    """Bootstrap-proposal state-space model (paper §II).
+
+    All callables are batched over the leading particle axis.
+
+    init_sampler:    (key, n) -> state pytree with leading dim n
+    dynamics_sample: (key, state) -> state            (the proposal π = prior)
+    log_likelihood:  (state, observation) -> (n,)     log p(z|x)
+    """
+
+    init_sampler: Callable[..., Any]
+    dynamics_sample: Callable[..., Any]
+    log_likelihood: Callable[..., Array]
+    state_dim: int = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class SIRConfig:
+    n_particles: int = 4096
+    resampler: str = "systematic"
+    ess_frac: float = 0.5           # resample when N_eff < ess_frac * N
+    always_resample: bool = False
+
+
+class StepOutput(NamedTuple):
+    estimate: Any        # MMSE state estimate (paper §II)
+    ess: Array           # global effective sample size
+    log_marginal: Array  # running log p(Z^k) increment
+    resampled: Array     # bool
+    diag: dict           # DRA diagnostics (links, overflow, q, ...)
+
+
+# ---------------------------------------------------------------------------
+# Single-device SIR (reference semantics for everything else)
+# ---------------------------------------------------------------------------
+
+def make_sir_step(model: StateSpaceModel, cfg: SIRConfig):
+    n = cfg.n_particles
+    counts_fn = resampling.RESAMPLERS[cfg.resampler]
+
+    def step(carry, observation):
+        key, state, lw = carry
+        key, k_dyn, k_res = jax.random.split(key, 3)
+        state = model.dynamics_sample(k_dyn, state)
+        ll = model.log_likelihood(state, observation)
+        lw = lw + ll
+
+        lz = jax.scipy.special.logsumexp(lw)
+        ess = effective_sample_size(lw)
+        w = normalized_weights(lw)
+        estimate = jax.tree_util.tree_map(
+            lambda x: jnp.tensordot(w.astype(x.dtype), x, axes=1), state)
+
+        do_resample = jnp.logical_or(ess < cfg.ess_frac * n,
+                                     jnp.asarray(cfg.always_resample))
+        counts = counts_fn(k_res, lw, n, capacity=n)
+        ancestors = resampling.counts_to_ancestors(counts, n)
+        res_state = jax.tree_util.tree_map(lambda x: x[ancestors], state)
+        state = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(do_resample, a, b), res_state, state)
+        # invariant: logsumexp(lw) == 0 entering every step, so ``lz`` IS
+        # the marginal-likelihood increment log p(z_k | Z^{k-1}).
+        lw = jnp.where(do_resample, jnp.full_like(lw, -jnp.log(n)), lw - lz)
+
+        out = StepOutput(estimate, ess, lz, do_resample, {})
+        return (key, state, lw), out
+
+    return step
+
+
+def run_sir(key: Array, model: StateSpaceModel, cfg: SIRConfig,
+            observations: Any):
+    """Run the filter over a stacked observation sequence."""
+    k_init, k_run = jax.random.split(key)
+    state = model.init_sampler(k_init, cfg.n_particles)
+    lw = jnp.full((cfg.n_particles,), -jnp.log(cfg.n_particles))
+    step = make_sir_step(model, cfg)
+    carry, outs = jax.lax.scan(step, (k_run, state, lw), observations)
+    return carry, outs
+
+
+# ---------------------------------------------------------------------------
+# Distributed (per-shard) SIR step
+# ---------------------------------------------------------------------------
+
+def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
+                              dra: dist.DRAConfig, axis_name: str = "data"):
+    """Per-shard SIR step.  ``cfg.n_particles`` is the GLOBAL count; each of
+    the P shards holds C = n_particles / P slots."""
+
+    def step(carry, observation):
+        key, state, lw = carry
+        c = lw.shape[0]
+        p = jax.lax.axis_size(axis_name)
+        n_total = c * p
+        key, k_dyn, k_res = jax.random.split(key, 3)
+
+        state = model.dynamics_sample(k_dyn, state)
+        ll = model.log_likelihood(state, observation)
+        lw = jnp.where(jnp.isfinite(lw), lw + ll, -jnp.inf)
+        max_ll = jnp.max(jnp.where(jnp.isfinite(lw), ll, -jnp.inf))
+
+        glz = dist.global_log_z(lw, axis_name)
+        ess = dist.global_ess(lw, axis_name)
+
+        # MMSE estimate with globally normalized weights (one psum)
+        w = jnp.exp(jnp.where(jnp.isfinite(lw), lw - glz, -jnp.inf))
+        estimate = jax.tree_util.tree_map(
+            lambda x: jax.lax.psum(jnp.tensordot(w.astype(x.dtype), x, axes=1),
+                                   axis_name), state)
+
+        do_resample = jnp.logical_or(ess < cfg.ess_frac * n_total,
+                                     jnp.asarray(cfg.always_resample))
+
+        if dra.kind == "mpf":
+            r_state, r_lw, diag = dist.mpf_resample(k_res, state, lw, dra, axis_name)
+        elif dra.kind == "rna":
+            r_state, r_lw, diag = dist.rna_resample(k_res, state, lw, dra, axis_name)
+        elif dra.kind == "arna":
+            r_state, r_lw, diag = dist.arna_resample(k_res, state, lw, dra,
+                                                     axis_name, max_ll)
+        elif dra.kind == "rpa":
+            r_state, r_lw, diag = dist.rpa_resample(k_res, state, lw, dra, axis_name)
+        else:
+            raise ValueError(dra.kind)
+
+        # select keeps SPMD collective schedule static (DESIGN.md §2.3)
+        state = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(do_resample, a, b), r_state, state)
+        lw = jnp.where(do_resample, r_lw, lw - glz)
+
+        out = StepOutput(estimate, ess, glz, do_resample, diag)
+        return (key, state, lw), out
+
+    return step

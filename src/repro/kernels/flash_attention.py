@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: flash attention with GQA (LM serving hot-spot).
+
+The decode_32k / long_500k dry-run cells are attention-memory-bound; this
+kernel is the TPU target for those paths (streaming softmax, KV never
+materialized to HBM beyond its natural layout, O(Lq·D) VMEM footprint).
+
+Design (TPU-native, MaxText-style):
+  grid = (batch, q_heads, Lq/BLOCK_Q, Lk/BLOCK_K); the Lk dimension is the
+  innermost (sequential) axis, carrying running (max, denom, acc) in VMEM
+  scratch.  GQA is expressed in the K/V BlockSpec index maps (kv head =
+  q head // group) — no KV replication in memory.  The causal mask is
+  applied per-tile; fully-masked tiles still occupy grid steps (Pallas TPU
+  has no dynamic grid skipping) but cost only a masked VPU pass since the
+  matmuls are tiny relative to the masked fraction at these block sizes.
+
+Supports optional logit soft-capping (gemma-style tanh cap).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, scale: float, logit_softcap: float,
+            block_q: int, block_k: int, lk: int, lq: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, ...]                   # (BQ, D)
+    k = k_ref[0, 0, ...]                   # (BK, D)
+    v = v_ref[0, 0, ...]                   # (BK, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+
+    if causal:
+        # absolute positions; q offset by (lk - lq) supports decode (lq < lk)
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0) + (lk - lq)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_cur[:, None])
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+    l_ref[...] = l_cur
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0, ...] = (acc_ref[...] /
+                            jnp.maximum(l_ref[...], 1e-30)[:, None]
+                            ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "logit_softcap", "block_q", "block_k", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    scale: float | None = None, logit_softcap: float = 0.0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> Array:
+    """q: (B, Hq, Lq, D);  k, v: (B, Hkv, Lk, D);  GQA via Hq % Hkv == 0."""
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = float(scale) if scale is not None else float(1.0 / d ** 0.5)
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    assert lq % block_q == 0 and lk % block_k == 0
+    grid = (b, hq, lq // block_q, lk // block_k)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, d),
+                           lambda b_, h, i, j: (b_, h // group, j, 0))
+    o_spec = pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0))
+
+    kernel = functools.partial(
+        _kernel, causal=causal, scale=scale, logit_softcap=logit_softcap,
+        block_q=block_q, block_k=block_k, lk=lk, lq=lq)
+
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,70 @@
+"""Public, jit'd entry points for the kernel layer.
+
+Each op dispatches between the Pallas TPU kernel and the pure-jnp oracle:
+
+* ``backend="pallas"``     — compile for TPU (production target);
+* ``backend="interpret"``  — Pallas interpret mode (CPU correctness runs);
+* ``backend="xla"``        — the ref.py oracle under plain XLA (this is
+  what the multi-pod dry-run lowers, since the container compiles for CPU).
+
+The default is resolved once from the actual backend so user code never
+branches on platform.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.patch_likelihood import patch_log_likelihood_kernel
+from repro.kernels.resample import systematic_ancestors_kernel
+
+Array = jax.Array
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def patch_log_likelihood(y: Array, x: Array, i0: Array, image: Array, *,
+                         radius: int = 4, sigma_psf: float = 1.16,
+                         sigma_like: float = 2.0, i_bg: float = 0.0,
+                         matched: bool = True, block_n: int = 1024,
+                         backend: str | None = None) -> Array:
+    backend = backend or default_backend()
+    if backend == "xla":
+        return ref.patch_log_likelihood_ref(
+            y, x, i0, image, radius=radius, sigma_psf=sigma_psf,
+            sigma_like=sigma_like, i_bg=i_bg, matched=matched)
+    return patch_log_likelihood_kernel(
+        y, x, i0, image, radius=radius, sigma_psf=sigma_psf,
+        sigma_like=sigma_like, i_bg=i_bg, matched=matched,
+        block_n=min(block_n, y.shape[0]),
+        interpret=(backend == "interpret"))
+
+
+def systematic_ancestors(log_weights: Array, u: Array, *,
+                         n_out: int | None = None, block: int = 1024,
+                         backend: str | None = None) -> Array:
+    backend = backend or default_backend()
+    n_out = n_out or log_weights.shape[0]
+    if backend == "xla":
+        return ref.systematic_ancestors_ref(log_weights, u, n_out)
+    return systematic_ancestors_kernel(
+        log_weights, u, n_out=n_out, block=min(block, n_out),
+        interpret=(backend == "interpret"))
+
+
+def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+              scale: float | None = None, logit_softcap: float = 0.0,
+              backend: str | None = None) -> Array:
+    backend = backend or default_backend()
+    if backend == "xla":
+        return ref.mha_ref(q, k, v, causal=causal, scale=scale,
+                           logit_softcap=logit_softcap)
+    return _flash_kernel(q, k, v, causal=causal, scale=scale,
+                         logit_softcap=logit_softcap,
+                         interpret=(backend == "interpret"))

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with assert_allclose).
+They are deliberately written in the most obvious way possible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# patch_likelihood oracle
+# ---------------------------------------------------------------------------
+
+def patch_log_likelihood_ref(y: Array, x: Array, i0: Array, image: Array, *,
+                             radius: int = 4, sigma_psf: float = 1.16,
+                             sigma_like: float = 2.0, i_bg: float = 0.0,
+                             matched: bool = True) -> Array:
+    h, w = image.shape
+    r = jnp.arange(-radius, radius + 1)
+    dy, dx = jnp.meshgrid(r, r, indexing="ij")
+
+    def one(yy, xx, ii):
+        cy = jnp.clip(jnp.round(yy).astype(jnp.int32), radius, h - 1 - radius)
+        cx = jnp.clip(jnp.round(xx).astype(jnp.int32), radius, w - 1 - radius)
+        patch = jax.lax.dynamic_slice(image, (cy - radius, cx - radius),
+                                      (2 * radius + 1, 2 * radius + 1))
+        py = (cy + dy).astype(yy.dtype)
+        px = (cx + dx).astype(xx.dtype)
+        model = ii * jnp.exp(-((py - yy) ** 2 + (px - xx) ** 2)
+                             / (2.0 * sigma_psf ** 2)) + i_bg
+        if matched:
+            val = jnp.sum(patch * model) - 0.5 * jnp.sum(model * model)
+        else:
+            val = -0.5 * jnp.sum((patch - model) ** 2)
+        return val / (sigma_like ** 2)
+
+    return jax.vmap(one)(y, x, i0)
+
+
+# ---------------------------------------------------------------------------
+# systematic resampling oracle
+# ---------------------------------------------------------------------------
+
+def systematic_ancestors_ref(log_weights: Array, u: Array, n_out: int) -> Array:
+    """Ancestor indices for systematic resampling with offset u ∈ [0,1)."""
+    lw = log_weights - jnp.max(log_weights)
+    w = jnp.exp(lw)
+    w = w / jnp.sum(w)
+    cdf = jnp.cumsum(w)
+    pts = (jnp.arange(n_out, dtype=log_weights.dtype) + u) / n_out
+    anc = jnp.searchsorted(cdf, pts, side="right")
+    return jnp.clip(anc, 0, log_weights.shape[0] - 1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle
+# ---------------------------------------------------------------------------
+
+def mha_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+            scale: float | None = None, logit_softcap: float = 0.0) -> Array:
+    """(B, Hq, Lq, D) x (B, Hkv, Lk, D) GQA attention, fp32 softmax."""
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    if logit_softcap > 0.0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    if causal:
+        lk = k.shape[2]
+        qi = jnp.arange(lq)[:, None] + (lk - lq)
+        ki = jnp.arange(lk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vv)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: systematic resampling ancestor selection.
+
+The resampling step is the only part of SIR that is not embarrassingly
+parallel (paper §II) — it needs the global weight CDF.  The kernel fuses:
+
+  1. weight normalization (max-shift + exp) and an inclusive prefix-sum of
+     the weights, computed once into a VMEM scratch buffer;
+  2. the stratified-comb binary search, blocked over output positions.
+
+The CDF lives in VMEM across all (sequential) grid steps, so the search
+pass never touches HBM for it.  Capacity: N f32 ≤ ~2M fits the 16 MB VMEM
+of a v5e core alongside blocks; per-shard ensembles in the distributed
+resamplers are far below that (global N scales with the mesh, per-shard N
+does not — that is the point of the PPF library).
+
+Binary search is expressed as a fixed ``ceil(log2(N))``-step vectorized
+bisection (Pallas has no searchsorted primitive on TPU).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BLOCK = 1024
+
+
+def _kernel(u_ref, lw_ref, anc_ref, cdf_ref, *, n_in: int, n_out: int,
+            block: int):
+    i = pl.program_id(0)
+
+    # --- pass 0: build the normalized CDF once (sequential grid on TPU) ---
+    @pl.when(i == 0)
+    def _build():
+        lw = lw_ref[...]
+        m = jnp.max(lw)
+        w = jnp.exp(lw - m)
+        w = w / jnp.sum(w)      # normalize BEFORE cumsum: bit-matches ref.py
+        cdf_ref[...] = jnp.cumsum(w)
+
+    # --- per-block: stratified comb points + vectorized bisection ---------
+    u = u_ref[0]
+    cdf = cdf_ref[...]
+    pos = (i * block + jax.lax.iota(jnp.float32, block) + u) / n_out
+
+    lo = jnp.zeros((block,), jnp.int32)
+    hi = jnp.full((block,), n_in, jnp.int32)
+    # invariant: cdf[lo-1] <= pos < cdf[hi]; find first index with cdf > pos
+    for _ in range(max(1, math.ceil(math.log2(max(n_in, 2))))):
+        mid = (lo + hi) // 2
+        cm = cdf[mid]
+        go_right = cm <= pos
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    anc_ref[...] = jnp.minimum(lo, n_in - 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_out", "block", "interpret"))
+def systematic_ancestors_kernel(log_weights: Array, u: Array, *,
+                                n_out: int | None = None,
+                                block: int = DEFAULT_BLOCK,
+                                interpret: bool = False) -> Array:
+    """Systematic-resampling ancestors.  u is the shared U[0,1) offset."""
+    n_in = log_weights.shape[0]
+    n_out = n_out or n_in
+    assert n_out % block == 0, (n_out, block)
+    grid = (n_out // block,)
+
+    kernel = functools.partial(_kernel, n_in=n_in, n_out=n_out, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),          # u (scalar-ish)
+            pl.BlockSpec((n_in,), lambda i: (0,)),       # full weights
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.int32),
+        scratch_shapes=[pltpu_vmem((n_in,), jnp.float32)],
+        interpret=interpret,
+    )(u.reshape(1), log_weights)
+
+
+def pltpu_vmem(shape, dtype):
+    """VMEM scratch allocation (kept separate for interpret-mode fallback)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import pulls in jax —
+# device count is locked at first jax initialization.  (This also means no
+# `from __future__` imports in this module.)
+
+_DOC = """Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers,
+compiles, and fits, and extract its roofline terms.
+
+Per cell:
+  1. FULL compile on the production mesh — memory_analysis (fits 16 GB?),
+     cost_analysis, collective census; this is the deployability proof.
+  2. depth-1 / depth-2 fully-unrolled variant compiles — exact
+     trip-corrected FLOPs / bytes / collective link bytes via linear
+     extrapolation (see launch/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k \
+      --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+__doc__ = _DOC
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.configs.base import ArchConfig
+from repro.launch import roofline as RL
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import mesh_context
+from repro.models.lm import model as M
+from repro.optim import OptConfig
+from repro.train import TrainConfig, make_serve_step, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def depth_variant(cfg: ArchConfig, k: int) -> ArchConfig:
+    """Same arch with k repeating units (+ head/tail), all scans unrolled."""
+    plan_unit = max(len(cfg.layer_pattern), 1)
+    first = cfg.moe.first_dense_layers if cfg.moe else 0
+    tail = (cfg.n_layers - first) % plan_unit
+    return dataclasses.replace(
+        cfg, n_layers=first + k * plan_unit + tail, scan_unroll=True)
+
+
+def n_units(cfg: ArchConfig) -> int:
+    plan_unit = max(len(cfg.layer_pattern), 1)
+    first = cfg.moe.first_dense_layers if cfg.moe else 0
+    return (cfg.n_layers - first) // plan_unit
+
+
+def build_step(cfg: ArchConfig, shape_name: str, microbatches: int,
+               xent_bf16: bool = False, moments_bf16: bool = False):
+    info = S.SHAPES[shape_name]
+    if info["kind"] == "train":
+        opt = OptConfig(
+            moment_dtype="bfloat16" if moments_bf16 else "float32")
+        tc = TrainConfig(
+            num_microbatches=microbatches,
+            xent_logits_dtype="bfloat16" if xent_bf16 else "float32")
+        return make_train_step(cfg, opt, tc), True
+    if info["kind"] == "prefill":
+        return make_serve_step(cfg, "prefill", max_len=info["seq"]), False
+    return make_serve_step(cfg, "decode"), False
+
+
+def compile_cell(cfg: ArchConfig, shape_name: str, mesh, *,
+                 microbatches: int, donate: bool = True,
+                 xent_bf16: bool = False, moments_bf16: bool = False):
+    """Lower + compile one cell; returns (compiled, seconds, meta)."""
+    step, is_train = build_step(cfg, shape_name, microbatches,
+                                xent_bf16=xent_bf16,
+                                moments_bf16=moments_bf16)
+    in_sh, in_specs = S.cell_shardings(cfg, shape_name, mesh,
+                                       moments_bf16=moments_bf16)
+    # train: donate params+opt; decode: donate the batch (KV caches alias
+    # their updated outputs — halves cache memory vs scan double-buffering)
+    if not donate:
+        donate_argnums = ()
+    elif is_train:
+        donate_argnums = (0, 1)
+    elif S.SHAPES[shape_name]["kind"] == "decode":
+        donate_argnums = (1,)
+    else:
+        donate_argnums = ()
+    t0 = time.time()
+    with mesh_context(mesh):
+        jitted = jax.jit(step, in_shardings=in_sh,
+                         donate_argnums=donate_argnums)
+        lowered = jitted.lower(*in_specs)
+        compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             skip_variants: bool = False, moe_dispatch: str = "",
+             attn_chunk: int = 0, ep_reduce: str = "",
+             xent_bf16: bool = False, moments_bf16: bool = False,
+             attn_bf16: bool = False, seq_parallel: bool = False) -> dict:
+    cfg = get_config(arch)
+    if moe_dispatch and cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=moe_dispatch))
+    if ep_reduce and cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, ep_reduce=ep_reduce))
+    if attn_chunk:
+        cfg = dataclasses.replace(cfg, attn_chunk=attn_chunk)
+    if attn_bf16:
+        cfg = dataclasses.replace(cfg, attn_scores_dtype="bfloat16")
+    if seq_parallel:
+        cfg = dataclasses.replace(cfg, seq_parallel=True)
+    info = S.SHAPES[shape_name]
+
+    if info["kind"] == "decode" and shape_name == "long_500k" \
+            and not cfg.supports_long_context:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": "pure full attention at 524k context "
+                          "(DESIGN.md §Arch-applicability)"}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    world = mesh.devices.size
+    mb = S.TRAIN_MICROBATCHES.get(arch, 8) if info["kind"] == "train" else 1
+
+    out: dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "world": world,
+                           "microbatches": mb, "status": "ok"}
+
+    # ---- 1. full compile: deployability + memory proof --------------------
+    compiled, secs = compile_cell(cfg, shape_name, mesh, microbatches=mb,
+                                  xent_bf16=xent_bf16,
+                                  moments_bf16=moments_bf16)
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    coll_full = RL.collective_link_bytes(compiled.as_text(), world)
+    out["compile_seconds"] = round(secs, 1)
+    out["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_per_device": ma.argument_size_in_bytes
+                           + ma.temp_size_in_bytes
+                           - ma.alias_size_in_bytes,
+        "fits_16GB": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                      - ma.alias_size_in_bytes) < 16e9,
+    }
+    out["cost_raw"] = {"flops": ca.get("flops", 0.0),
+                       "bytes_accessed": ca.get("bytes accessed", 0.0)}
+    out["collectives_full_uncorrected"] = {
+        k: v for k, v in coll_full.items() if k != "_counts"}
+    out["collective_counts"] = coll_full.get("_counts", {})
+    del compiled
+
+    if skip_variants:
+        return out
+
+    # ---- 2. depth variants: trip-corrected totals --------------------------
+    meas = {}
+    for k in (1, 2):
+        vcfg = depth_variant(cfg, k)
+        vmb = 1  # single pass = identical arithmetic per token
+        vc, vsecs = compile_cell(vcfg, shape_name, mesh, microbatches=vmb,
+                                 donate=False, xent_bf16=xent_bf16,
+                                 moments_bf16=moments_bf16)
+        vca = vc.cost_analysis() or {}
+        vcoll = RL.collective_link_bytes(vc.as_text(), world)
+        meas[k] = {
+            "flops": vca.get("flops", 0.0),
+            "bytes": vca.get("bytes accessed", 0.0),
+            "coll": sum(v for kk, v in vcoll.items() if kk != "_counts"),
+            "coll_by_kind": {kk: v for kk, v in vcoll.items()
+                             if kk != "_counts"},
+            "secs": vsecs,
+        }
+        del vc
+
+    ku = n_units(cfg)
+    flops = RL.extrapolate(meas[1]["flops"], meas[2]["flops"], ku)
+    bts = RL.extrapolate(meas[1]["bytes"], meas[2]["bytes"], ku)
+    coll = RL.extrapolate(meas[1]["coll"], meas[2]["coll"], ku)
+    coll_kind = {
+        kk: RL.extrapolate(meas[1]["coll_by_kind"].get(kk, 0.0),
+                           meas[2]["coll_by_kind"].get(kk, 0.0), ku)
+        for kk in set(meas[1]["coll_by_kind"]) | set(meas[2]["coll_by_kind"])}
+
+    analysis = RL.CellAnalysis(
+        flops=flops, bytes_accessed=bts, coll_bytes=coll,
+        coll_by_kind=coll_kind,
+        flops_raw_full=out["cost_raw"]["flops"],
+        peak_memory=out["memory"]["peak_per_device"],
+        argument_bytes=out["memory"]["argument_bytes"],
+        temp_bytes=out["memory"]["temp_bytes"],
+        compile_seconds=out["compile_seconds"])
+    terms = analysis.terms()
+
+    mf = RL.model_flops(cfg, info)
+    hlo_total = flops * world
+    out["roofline"] = {
+        **{k: round(v, 6) if isinstance(v, float) else v
+           for k, v in terms.items()},
+        "flops_per_device": flops,
+        "bytes_per_device": bts,
+        "coll_bytes_per_device": coll,
+        "coll_by_kind": coll_kind,
+        "model_flops_total": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "variant_meas": meas,
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(S.SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-variants", action="store_true",
+                    help="compile-proof only (no roofline extrapolation)")
+    ap.add_argument("--moe-dispatch", default="",
+                    choices=["", "xla", "ep_shardmap"],
+                    help="override MoE dispatch (perf iteration)")
+    ap.add_argument("--attn-chunk", type=int, default=0,
+                    help="override attention q-chunk (perf iteration)")
+    ap.add_argument("--moe-ep-reduce", default="",
+                    choices=["", "psum", "rs_ag"])
+    ap.add_argument("--xent-bf16", action="store_true")
+    ap.add_argument("--moments-bf16", action="store_true")
+    ap.add_argument("--attn-bf16", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output JSON (perf variants)")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(S.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                tag = f"{arch}__{shape}__{mk}"
+                if args.tag:
+                    tag += "__" + args.tag
+                try:
+                    res = run_cell(arch, shape, mk,
+                                   skip_variants=args.skip_variants,
+                                   moe_dispatch=args.moe_dispatch,
+                                   attn_chunk=args.attn_chunk,
+                                   ep_reduce=args.moe_ep_reduce,
+                                   xent_bf16=args.xent_bf16,
+                                   moments_bf16=args.moments_bf16,
+                                   attn_bf16=args.attn_bf16,
+                                   seq_parallel=args.seq_parallel)
+                except Exception as e:   # noqa: BLE001 — report & continue
+                    res = {"arch": arch, "shape": shape, "mesh": mk,
+                           "status": "FAILED", "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    failures += 1
+                with open(os.path.join(OUT_DIR, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=1, default=str)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" compile={res['compile_seconds']}s"
+                             f" peak={res['memory']['peak_per_device']/1e9:.2f}GB"
+                             f" fits={res['memory']['fits_16GB']}")
+                    if "roofline" in res:
+                        t = res["roofline"]
+                        extra += (f" dom={t['dominant']}"
+                                  f" step≥{t['step_lower_bound_s']:.4f}s")
+                print(f"[{tag}] {status}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+    compute term    = FLOPs_per_device  / peak_FLOPs
+    memory term     = bytes_per_device  / HBM_bw
+    collective term = coll_bytes_per_device / link_bw
+
+Sources: ``compiled.cost_analysis()`` for FLOPs / bytes accessed;
+``compiled.as_text()`` for the collective schedule (op kind, payload
+bytes, replica-group size → ring-model link bytes).
+
+**Trip-count correction.**  XLA's HloCostAnalysis visits a while body
+ONCE, so any lax.scan (layer stack, attention q-chunks, SSD chunks, loss
+chunks, grad-accum) is undercounted.  Rather than guessing trip counts out
+of HLO text, we compile two *fully-unrolled depth variants* of each cell —
+k=1 and k=2 repeating units (same mesh, same shardings) — and use
+
+    total(k_full) = f(1) + (k_full − 1) · (f(2) − f(1))
+
+which is exact for a homogeneous layer stack (embed/head/tail/loss costs
+cancel in the difference).  The same extrapolation applies to bytes and to
+per-collective-schedule link bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<otype>\([^=]*?\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> list[int]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dt])
+    return out
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return world
+
+
+def collective_link_bytes(hlo_text: str, world: int) -> dict[str, float]:
+    """Per-device ICI bytes by ring model, keyed by collective kind."""
+    totals: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        sizes = _shape_bytes(m.group("otype"))
+        if not sizes:
+            continue
+        size = max(sizes)        # -start tuples carry (operand, result)
+        g = max(_group_size(line, world), 1)
+        if g == 1:
+            continue
+        ring = (g - 1) / g
+        if op == "all-gather":
+            b = size * ring
+        elif op == "reduce-scatter":
+            b = size * (g - 1)          # size is the scattered output
+        elif op == "all-reduce":
+            b = 2 * size * ring
+        elif op == "all-to-all":
+            b = size * ring
+        else:                            # collective-permute
+            b = size
+        totals[op] = totals.get(op, 0.0) + b
+        count[op] = count.get(op, 0) + 1
+    totals["_counts"] = count
+    return totals
+
+
+@dataclasses.dataclass
+class CellAnalysis:
+    flops: float                 # per-device, trip-corrected
+    bytes_accessed: float        # per-device, trip-corrected
+    coll_bytes: float            # per-device link bytes, trip-corrected
+    coll_by_kind: dict
+    flops_raw_full: float        # full compile, uncorrected (context)
+    peak_memory: float           # per-device bytes (args + temps)
+    argument_bytes: float
+    temp_bytes: float
+    compile_seconds: float
+
+    def terms(self) -> dict[str, float]:
+        ct = self.flops / PEAK_FLOPS
+        mt = self.bytes_accessed / HBM_BW
+        xt = self.coll_bytes / LINK_BW
+        dom = max((("compute", ct), ("memory", mt), ("collective", xt)),
+                  key=lambda kv: kv[1])[0]
+        return {"compute_s": ct, "memory_s": mt, "collective_s": xt,
+                "dominant": dom,
+                "step_lower_bound_s": max(ct, mt, xt)}
+
+
+def extrapolate(f1: float, f2: float, k_full: int) -> float:
+    """total(k_full) from unrolled depth-1/depth-2 measurements."""
+    body = f2 - f1
+    return f1 + (k_full - 1) * body
+
+
+def model_flops(cfg, shape_info) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (dense) or 6·N_active·D (MoE), where D
+    is tokens processed; serve steps use 2·N·D (forward only)."""
+    n_active = active_params(cfg)
+    tokens = shape_info["batch"] * (shape_info["seq"]
+                                    if shape_info["kind"] != "decode" else 1)
+    mult = 6 if shape_info["kind"] == "train" else 2
+    return mult * n_active * tokens
+
+
+def active_params(cfg) -> float:
+    """Parameter count active per token (MoE counts top_k+shared experts)."""
+    import jax
+    from repro.models.lm import model as M
+
+    params = jax.eval_shape(lambda: M.init_params(jax.random.key(0), cfg))
+    total = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    if not cfg.moe:
+        return float(total)
+    # subtract inactive expert fraction
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    expert_total = sum(
+        leaf.size for path, leaf in flat
+        if any(str(getattr(p, "key", "")) in ("we_gate", "we_up", "we_down")
+               for p in path))
+    return float(total - expert_total * (1.0 - k / e))

@@ -1,0 +1,184 @@
+"""Sharding rules: parameter PartitionSpecs + activation constraints.
+
+Model code never names mesh axes directly — it calls ``constrain(x, KIND)``
+with a *logical* kind, and this module resolves kinds to PartitionSpecs for
+the currently active mesh (single-pod ``(data, model)`` or multi-pod
+``(pod, data, model)``).  Outside a mesh context every constraint is a
+no-op, so the same model code runs on one CPU device in tests.
+
+Parameter sharding is FSDP×TP: every weight matrix is sharded over
+``model`` on its TP-natural axis and over ``data`` (+``pod``) on the other
+— optimizer state inherits the same specs, which is what makes the 236B
+config fit (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def _state():
+    if not hasattr(_ctx, "mesh"):
+        _ctx.mesh = None
+        _ctx.batch_axes = None
+        _ctx.fsdp_axes = None
+    return _ctx
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    """Activate a mesh.  Axis roles are inferred from axis names."""
+    st = _state()
+    prev = (st.mesh, st.batch_axes, st.fsdp_axes)
+    names = mesh.axis_names
+    batch = tuple(n for n in names if n in ("pod", "data"))
+    st.mesh = mesh
+    st.batch_axes = batch if len(batch) > 1 else (batch[0] if batch else None)
+    st.fsdp_axes = batch if len(batch) > 1 else ("data" if "data" in names
+                                                 else None)
+    try:
+        with jax.set_mesh(mesh):
+            yield mesh
+    finally:
+        st.mesh, st.batch_axes, st.fsdp_axes = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _state().mesh
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (logical kinds)
+# ---------------------------------------------------------------------------
+
+def spec_for(kind: str) -> Optional[P]:
+    st = _state()
+    if st.mesh is None:
+        return None
+    b = st.batch_axes
+    table = {
+        "batch_seq": P(b, None),                 # (B, T) tokens
+        "act": P(b, None, None),                 # (B, T, D)
+        "act_sp": P(b, "model", None),           # (B, T/TP, D) Megatron-SP
+        "act_ffn": P(b, None, "model"),          # (B, T, F)
+        "act_heads": P(b, "model", None, None),  # (B, H, T, hd)
+        "logits": P(b, None, "model"),           # (B, T, V)
+        "kv_cache": P(b, "model", None, None),   # (B, Hkv, L, hd)
+        "kv_cache_seq": P(b, None, "data", None),# long-context: L over data
+        "moe_buf_d": P("data", None, None),      # (E, C, D) expert buffers
+        "moe_buf_f": P("data", None, "model"),   # (E, C, F) expert hidden
+        "tokens_flat": P(b, None),               # (B·T, D) flattened tokens
+        "particles": P(b, None),                 # (N, state_dim)
+    }
+    return table.get(kind)
+
+
+def constrain(x: Any, kind: str) -> Any:
+    spec = spec_for(kind)
+    if spec is None:
+        return x
+    mesh = _state().mesh
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+    except ValueError:
+        # rank mismatch etc. — constraints are best-effort hints
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-pattern → spec)
+# ---------------------------------------------------------------------------
+
+def param_spec(path: str, shape: tuple[int, ...],
+               mesh: Mesh | None = None) -> P:
+    """PartitionSpec for a parameter, by name pattern + rank.
+
+    Stacked (scanned) parameters carry a leading layer axis that is never
+    sharded; rules below address the trailing dims.
+    """
+    if mesh is not None:
+        ax = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+        fsdp = ax if len(ax) > 1 else (ax[0] if ax else None)
+    else:
+        fsdp = _state().fsdp_axes
+    def pad(spec_tail: tuple) -> P:
+        # left-pad with None for any leading stack axes
+        extra = len(shape) - len(spec_tail)
+        return P(*([None] * extra + list(spec_tail)))
+
+    leaf = path.split("/")[-1]
+    # --- embeddings / heads -------------------------------------------------
+    if leaf in ("embed",):
+        return pad(("model", fsdp))              # (V, D)
+    if leaf in ("lm_head",):
+        return pad((fsdp, "model"))              # (D, V)
+    if leaf in ("img_proj",):
+        return pad((None, "model"))
+    # --- MoE expert banks: experts over data (EP), ff over model ------------
+    if leaf in ("we_gate", "we_up"):
+        return pad(("data", None, "model"))      # (E, D, F)
+    if leaf == "we_down":
+        return pad(("data", "model", None))      # (E, F, D)
+    if leaf == "router":
+        return pad((fsdp, None))
+    # --- dense MLP -----------------------------------------------------------
+    if leaf in ("w_gate", "w_up"):
+        return pad((fsdp, "model"))              # (D, F) column
+    if leaf == "w_down":
+        return pad(("model", fsdp))              # (F, D) row
+    # --- attention ----------------------------------------------------------
+    if leaf in ("wq", "wk", "wv", "wq_b", "wk_b", "wv_b", "w_gate_in",
+                "w_x", "w_in"):
+        return pad((fsdp, "model"))              # column-parallel
+    if leaf in ("wo", "w_out", "w_down"):
+        return pad(("model", fsdp))              # row-parallel
+    if leaf in ("wq_a", "wkv_a"):
+        return pad((fsdp, None))                 # low-rank in-proj (small out)
+    if leaf in ("w_rec_gate", "w_in_gate"):
+        return pad((fsdp, "model"))
+    # --- everything small (norms, biases, scalars) --------------------------
+    return pad(tuple(None for _ in shape))
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on any dim not divisible by its mesh-axis extent.
+
+    pjit requires exact divisibility for input shardings; odd sizes
+    (e.g. mamba2's vocab 50280 over a 16-way model axis) fall back to
+    replication on that dim rather than failing the cell."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        # drop axes the mesh doesn't have (e.g. 'model' on a 1-D PF mesh)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes:
+            out.append(None)
+            continue
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        entry = axes if len(axes) > 1 else axes[0]
+        out.append(entry if dim % extent == 0 else None)
+    return P(*out)
+
+
+def make_param_shardings(mesh: Mesh, params: Any) -> Any:
+    """NamedSharding pytree matching ``params`` via ``param_spec`` rules."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        spec = fit_spec(param_spec(name, leaf.shape, mesh), leaf.shape, mesh)
+        specs.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)

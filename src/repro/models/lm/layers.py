@@ -1,0 +1,263 @@
+"""Shared transformer building blocks (pure JAX, pjit-friendly).
+
+Everything here is written for SPMD lowering on the production mesh:
+
+* attention is *chunked* over the query axis (lax-flash streaming softmax)
+  so peak activation memory is O(T·chunk) rather than O(T²) — the XLA-path
+  equivalent of ``repro.kernels.flash_attention`` (which is the TPU target);
+* sliding-window layers slice their KV to ``window + chunk`` per q-chunk,
+  making local attention O(T·window) compute (this is what turns gemma3 /
+  recurrentgemma long-context cells sub-quadratic);
+* GQA is computed with grouped einsums — KV heads are never repeated in
+  memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms & RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding.  x: (..., T, n_heads, head_dim), positions: (T,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freq[None, :]   # (T, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (training / prefill: chunked lax-flash; decode: single step)
+# ---------------------------------------------------------------------------
+
+def _grouped_scores(q: Array, k: Array, scale, softcap: float,
+                    dtype=jnp.float32) -> Array:
+    """q: (B, Hkv, G, Tq, hd), k: (B, Hkv, Tk, hd) → (B, Hkv, G, Tq, Tk)."""
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k,
+                   preferred_element_type=dtype) * jnp.asarray(scale, dtype)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _masked_softmax(s: Array, mask: Array | None, out_dtype) -> Array:
+    """Softmax with f32-accumulated denominator.  When ``s`` is bf16 the
+    big (Tq, Tk) intermediates stay bf16 (halving the dominant HBM term of
+    the train cells — EXPERIMENTS §Perf); only the row statistics are f32."""
+    if mask is not None:
+        s = jnp.where(mask, s, jnp.asarray(NEG_INF_MASK, s.dtype))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32)
+    return (p * (1.0 / denom).astype(p.dtype)).astype(out_dtype)
+
+
+NEG_INF_MASK = -1e30
+
+
+def _constrain_grouped(x: Array, head_dims: tuple[int, ...]) -> Array:
+    """Shard one of ``head_dims`` over the model axis if divisible.
+
+    The (B, Hq) → (B, Hkv, G) regroup defeats SPMD sharding propagation
+    (XLA falls back to full replication of the score tensors — the
+    dominant memory-roofline term of every train cell, see EXPERIMENTS
+    §Perf cell 2), so the layout is pinned explicitly here."""
+    from repro.launch.sharding import _state
+    import jax as _jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    st = _state()
+    if st.mesh is None or "model" not in st.mesh.axis_names:
+        return x
+    m = st.mesh.shape["model"]
+    spec = [st.batch_axes] + [None] * (x.ndim - 1)
+    for d in head_dims:
+        if x.shape[d] % m == 0:
+            spec[d] = "model"
+            break
+    else:
+        return x
+    try:
+        return _jax.lax.with_sharding_constraint(
+            x, NamedSharding(st.mesh, P(*spec)))
+    except ValueError:
+        return x
+
+
+def chunked_causal_attention(q: Array, k: Array, v: Array, *, window: int = 0,
+                             chunk: int = 512, softcap: float = 0.0,
+                             scale: float | None = None,
+                             pos_offset: Array | int = 0,
+                             causal: bool = True,
+                             unroll: bool = False,
+                             scores_dtype=jnp.float32) -> Array:
+    """Streaming-softmax causal attention.
+
+    q: (B, Hq, T, hd);  k/v: (B, Hkv, Tk, hd).  ``window`` > 0 enables
+    sliding-window masking AND KV slicing (compute O(T·window)).
+    ``pos_offset`` shifts absolute positions (chunked prefill continuation).
+    ``causal=False`` gives full (cross-)attention over all Tk keys.
+    """
+    b, hq, t, hd = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    n_chunks = t // chunk
+    # Layout policy: TP wants the scores head-sharded.  If Hkv divides the
+    # model axis, keep the grouped (no-KV-replication) form; if only Hq
+    # divides (e.g. qwen3 Hkv=8 < TP=16 but Hq=64), fall back to repeated
+    # KV heads so scores shard on Hq — the repeat is tiny next to the
+    # (Tq,Tk) scores it de-replicates (EXPERIMENTS §Perf cell 2).
+    from repro.launch.sharding import _state
+    _mesh = _state().mesh
+    _m = _mesh.shape["model"] if (_mesh is not None and
+                                  "model" in _mesh.axis_names) else 1
+    # only repeat when NEITHER Hkv nor G divides TP (e.g. qwen3 8×8);
+    # MQA with G % TP == 0 (granite 1×48) shards the grouped form directly
+    if _m > 1 and hkv % _m and g % _m and hq % _m == 0:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+        hkv, g = hq, 1
+    # pin layouts across the (B,Hq)→(B,Hkv,G) regroup: heads (or groups)
+    # over `model`; see _constrain_grouped.
+    qg = _constrain_grouped(q.reshape(b, hkv, g, t, hd), (1, 2))
+    k = _constrain_grouped(k, (1,))
+    v = _constrain_grouped(v, (1,))
+
+    use_slice = causal and window > 0 and (window + chunk) < tk
+    kv_len = window + chunk if use_slice else tk
+
+    def body(_, i):
+        q_c = jax.lax.dynamic_slice_in_dim(qg, i * chunk, chunk, axis=3)
+        if use_slice:
+            start = jnp.clip(i * chunk + chunk - kv_len, 0, tk - kv_len)
+        else:
+            start = 0
+        k_c = jax.lax.dynamic_slice_in_dim(k, start, kv_len, axis=2)
+        v_c = jax.lax.dynamic_slice_in_dim(v, start, kv_len, axis=2)
+        s = _grouped_scores(q_c, k_c, scale, softcap,
+                            dtype=scores_dtype)           # (B,Hkv,G,chunk,kv)
+        s = _constrain_grouped(s, (1, 2))      # heads or groups over model
+        mask = None
+        if causal:
+            q_pos = i * chunk + jnp.arange(chunk) + pos_offset
+            k_pos = start + jnp.arange(kv_len) + pos_offset
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            mask = mask[None, None, None]
+        p = _masked_softmax(s, mask, v.dtype)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_c)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks), unroll=unroll)
+    # outs: (n_chunks, B, Hkv, G, chunk, vd) → (B, Hq, T, vd)
+    vd = v.shape[-1]
+    outs = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, t, vd)
+    return outs.reshape(b, hq, t, vd)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, pos, *,
+                     window: int = 0, softcap: float = 0.0,
+                     scale: float | None = None) -> Array:
+    """One-token attention against a KV cache.
+
+    q: (B, Hq, 1, hd);  caches: (B, Hkv, L, hd);  ``pos`` — scalar index of
+    the current token (cache slots > pos are masked).
+    """
+    b, hq, _, hd = q.shape
+    hkv, l = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = _constrain_grouped(q.reshape(b, hkv, g, 1, hd), (1, 2))
+    s = _grouped_scores(qg, k_cache, scale, softcap)       # (B,Hkv,G,1,L)
+    s = _constrain_grouped(s, (1, 2, 4))
+    k_pos = jnp.arange(l)
+    mask = k_pos <= pos
+    if window > 0:
+        mask &= (pos - k_pos) < window
+    p = _masked_softmax(s, mask[None, None, None, None, :], v_cache.dtype)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_cache)
+    return o.reshape(b, hq, 1, hd)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (params + apply) used by every attention-bearing family
+# ---------------------------------------------------------------------------
+
+def attn_params(key: Array, d_model: int, n_heads: int, n_kv: int, hd: int,
+                qk_norm: bool, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, n_heads * hd), dtype) * s),
+        "wk": (jax.random.normal(k2, (d_model, n_kv * hd), dtype) * s),
+        "wv": (jax.random.normal(k3, (d_model, n_kv * hd), dtype) * s),
+        "wo": (jax.random.normal(k4, (n_heads * hd, d_model), dtype)
+               * (n_heads * hd) ** -0.5),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def apply_qkv(p: dict, x: Array, n_heads: int, n_kv: int, hd: int,
+              positions: Array, theta: float, qk_norm: bool, eps: float):
+    b, t, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, t, n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, t, n_kv, hd)
+    v = (x @ p["wv"]).reshape(b, t, n_kv, hd)
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    # (B, T, H, hd) → (B, H, T, hd)
+    return (jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(key: Array, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def apply_mlp(p: dict, x: Array) -> Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

@@ -1,0 +1,95 @@
+"""RG-LRU recurrent blocks (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence  h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)  is a
+first-order linear recurrence, so training/prefill runs it as a
+``jax.lax.associative_scan`` (O(log T) depth — TPU-friendly); decode is a
+single fused update.  Blocks follow the Griffin temporal pattern
+(recurrent, recurrent, attention) set by ``RGLRUConfig.block_pattern``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+
+Array = jax.Array
+
+_C = 8.0   # the paper's fixed recurrence temperature
+
+
+def rglru_params(key: Array, d_model: int, cfg: RGLRUConfig, dtype) -> dict:
+    w = cfg.lru_width
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "w_x": jax.random.normal(ks[0], (d_model, w), dtype) * s,
+        "w_gate_in": jax.random.normal(ks[1], (d_model, w), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, w), dtype) * 0.1,
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_rec_gate": jax.random.normal(ks[3], (w, w), dtype) * w ** -0.5,
+        "w_in_gate": jax.random.normal(ks[4], (w, w), dtype) * w ** -0.5,
+        # Λ init so that a = σ(Λ)^c ∈ (0.9, 0.999)
+        "lam": jnp.log(jnp.exp(jnp.linspace(2.0, 6.0, w)) - 1.0).astype(
+            jnp.float32),
+        "w_out": jax.random.normal(ks[5], (w, d_model), dtype) * w ** -0.5,
+    }
+
+
+def _gates(p: dict, xw: Array):
+    """r/i gates and log-decay for RG-LRU.  xw: (..., W)."""
+    r = jax.nn.sigmoid((xw @ p["w_rec_gate"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xw @ p["w_in_gate"]).astype(jnp.float32))
+    log_a_base = -_C * jax.nn.softplus(p["lam"])          # log σ(Λ)^c (<0)
+    log_a = r * log_a_base                                 # (..., W)
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xw.astype(jnp.float32))
+    return a, gated_in
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i: i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def rglru_forward(p: dict, x: Array, cfg: RGLRUConfig,
+                  return_state: bool = False):
+    """Full-sequence recurrent block.  x: (B, T, D) → (B, T, D).
+
+    ``return_state=True`` additionally returns (rec_state, conv_state)."""
+    xw_lin = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+    xw = _causal_conv(xw_lin, p["conv_w"], p["conv_b"])
+    a, gi = _gates(p, xw)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gi), axis=1)
+    del a_s
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    if return_state:
+        k = cfg.conv_width
+        return out, h[:, -1], xw_lin[:, x.shape[1] - (k - 1):, :]
+    return out
+
+
+def rglru_decode_step(p: dict, x: Array, cfg: RGLRUConfig, *,
+                      rec_state: Array, conv_state: Array):
+    """x: (B, 1, D); rec_state: (B, W) f32; conv_state: (B, K-1, W)."""
+    gate = jax.nn.gelu(x @ p["w_gate_in"])[:, 0]
+    xw_lin = (x @ p["w_x"])[:, 0]
+    window = jnp.concatenate([conv_state, xw_lin[:, None, :]], axis=1)
+    xw = jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + p["conv_b"]
+    new_conv_state = window[:, 1:]
+    a, gi = _gates(p, xw)
+    rec_state = a * rec_state + gi
+    h = rec_state.astype(x.dtype) * gate
+    return (h @ p["w_out"])[:, None, :], rec_state, new_conv_state

@@ -1,0 +1,181 @@
+"""Mamba-2 SSD blocks (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: within-chunk terms are
+dense "attention-like" matmuls (MXU-friendly), across-chunk state is a
+short ``lax.scan`` over T/chunk steps carrying the (H, P, N) state.
+Decode is the O(1) recurrent update — this is why ``mamba2-1.3b`` runs the
+long_500k cell that quadratic-attention archs must skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.lm.layers import rms_norm
+
+Array = jax.Array
+
+
+def ssm_params(key: Array, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    g, n = cfg.n_groups, cfg.state_dim
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    # fused input projection: [z (gate), x, B, C, dt]
+    d_proj = 2 * d_inner + 2 * g * n + n_heads
+    return {
+        "w_in": jax.random.normal(ks[0], (d_model, d_proj), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width,
+                                            d_inner + 2 * g * n), dtype) * 0.1,
+        "conv_b": jnp.zeros((d_inner + 2 * g * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": jnp.zeros((d_inner,), dtype),
+        "w_out": jax.random.normal(ks[2], (d_inner, d_model), dtype)
+                 * d_inner ** -0.5,
+    }
+
+
+def _split_proj(p, x, cfg: SSMConfig, d_model: int):
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    g, n = cfg.n_groups, cfg.state_dim
+    proj = x @ p["w_in"]
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner: 2 * d_inner + 2 * g * n]
+    dt = proj[..., 2 * d_inner + 2 * g * n:]
+    return z, xbc, dt, d_inner, n_heads, g, n
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along T.  xbc: (B, T, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):   # K=4: unrolled depthwise taps
+        out = out + pad[:, i: i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(log_a: Array) -> Array:
+    """(..., Q) per-step log-decays → (..., Q, Q) lower-tri cumulative sums."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(p: dict, x: Array, cfg: SSMConfig, d_model: int,
+                eps: float, return_state: bool = False,
+                unroll: bool = False):
+    """Chunked SSD over a full sequence.  x: (B, T, D) → (B, T, D).
+
+    ``return_state=True`` additionally returns (ssm_state, conv_state) for
+    prefill → decode handoff.
+    """
+    b, t, _ = x.shape
+    z, xbc, dt, d_inner, h, g, n = _split_proj(p, x, cfg, d_model)
+    conv_tail = xbc[:, t - (cfg.conv_width - 1):, :]     # raw pre-conv tail
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_inner].reshape(b, t, h, cfg.head_dim)
+    bmat = xbc[..., d_inner:d_inner + g * n].reshape(b, t, g, n)
+    cmat = xbc[..., d_inner + g * n:].reshape(b, t, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,T,H)
+    a = -jnp.exp(p["a_log"])                                        # (H,)
+    log_decay = dt * a                                              # (B,T,H)
+
+    q = min(cfg.chunk, t)
+    assert t % q == 0
+    nc = t // q
+    hpg = h // g  # heads per B/C group
+
+    def reshape_chunks(arr, extra):
+        return arr.reshape((b, nc, q) + extra)
+
+    xs_c = reshape_chunks(xs, (h, cfg.head_dim))
+    b_c = reshape_chunks(bmat, (g, n))
+    c_c = reshape_chunks(cmat, (g, n))
+    ld_c = reshape_chunks(log_decay, (h,)).astype(jnp.float32)
+    dt_c = reshape_chunks(dt, (h,))
+
+    # ---- intra-chunk (quadratic within q; "attention duality" term) ------
+    lseg = _segsum(jnp.moveaxis(ld_c, -1, -2))          # (B,NC,H,Q,Q)
+    gmat = jnp.exp(lseg)
+    # scores: C_i · B_j per group, expanded to heads
+    cb = jnp.einsum("bcqgn,bckgn->bcgqk", c_c, b_c)     # (B,NC,G,Q,Q)
+    cb = jnp.repeat(cb, hpg, axis=2)                    # (B,NC,H,Q,Q)
+    att = cb * gmat * jnp.moveaxis(dt_c, -1, -2)[..., None, :]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", att.astype(xs_c.dtype), xs_c)
+
+    # ---- chunk-final states ------------------------------------------------
+    ld_sum = jnp.sum(ld_c, axis=2)                      # (B,NC,H)
+    # decay from step j (exclusive) to chunk end: exp(Σ_{j+1..Q} ld)
+    decay_to_end = jnp.exp(ld_sum[:, :, None, :] - jnp.cumsum(ld_c, axis=2))
+    bx = jnp.einsum("bcqgn,bcqhp,bcqh,bcqh->bchpn",
+                    b_c, xs_c, decay_to_end, dt_c)      # states per chunk
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    chunk_decay = jnp.exp(ld_sum)                       # (B,NC,H)
+
+    def scan_fn(state, inp):
+        s_new, dec = inp                                # (B,H,P,N), (B,H)
+        out = state                                     # state BEFORE chunk
+        state = state * dec[..., None, None] + s_new.astype(jnp.float32)
+        return state, out
+
+    init = jnp.zeros((b, h, cfg.head_dim, n), jnp.float32)  # f32 recurrence
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(bx, 1, 0),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)),
+        unroll=unroll)
+    prev_states = jnp.moveaxis(prev_states, 0, 1).astype(xs.dtype)
+
+    # ---- off-diagonal contribution: C_t · decayed prev state ---------------
+    decay_in = jnp.exp(jnp.cumsum(ld_c, axis=2))        # (B,NC,Q,H)
+    c_h = jnp.repeat(c_c, hpg, axis=3)                  # (B,NC,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", c_h, prev_states, decay_in)
+
+    y = (y_diag + y_off).reshape(b, t, h, cfg.head_dim)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(b, t, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], eps)
+    out = y @ p["w_out"]
+    if return_state:
+        return out, final_state, conv_tail
+    return out
+
+
+def ssd_decode_step(p: dict, x: Array, cfg: SSMConfig, d_model: int,
+                    eps: float, *, ssm_state: Array, conv_state: Array):
+    """O(1) recurrent step.  x: (B, 1, D);
+    ssm_state: (B, H, P, N);  conv_state: (B, K-1, d_conv_channels)."""
+    b = x.shape[0]
+    z, xbc, dt, d_inner, h, g, n = _split_proj(p, x, cfg, d_model)
+    # causal conv with carried state
+    window = jnp.concatenate([conv_state, xbc], axis=1)      # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_conv_state = window[:, 1:]
+
+    xs = conv_out[..., :d_inner].reshape(b, h, cfg.head_dim)
+    bvec = conv_out[..., d_inner:d_inner + g * n].reshape(b, g, n)
+    cvec = conv_out[..., d_inner + g * n:].reshape(b, g, n)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)                                   # (B,H)
+
+    hpg = h // g
+    b_h = jnp.repeat(bvec, hpg, axis=1)                       # (B,H,N)
+    c_h = jnp.repeat(cvec, hpg, axis=1)
+    upd = jnp.einsum("bhp,bhn,bh->bhpn", xs, b_h, dt.astype(xs.dtype))
+    ssm_state = ssm_state * decay[..., None, None].astype(xs.dtype) + upd
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, c_h)
+    y = y + xs * p["d_skip"][None, :, None].astype(xs.dtype)
+    y = y.reshape(b, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], eps)
+    return y @ p["w_out"], ssm_state, new_conv_state

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (OptConfig, adamw_update, init_opt_state,
+                               learning_rate)
+
+__all__ = ["OptConfig", "adamw_update", "init_opt_state", "learning_rate"]

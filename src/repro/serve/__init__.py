@@ -1,0 +1,4 @@
+from repro.serve.engine import generate
+from repro.serve.smc_decode import SMCDecodeConfig, smc_decode
+
+__all__ = ["generate", "smc_decode", "SMCDecodeConfig"]

@@ -1,0 +1,65 @@
+"""Batched generation engine: prefill once, decode with a KV cache.
+
+The decode loop is a single jitted ``lax.scan`` (one compile for any
+generation length); sampling is greedy or temperature-categorical.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import model as M
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "steps", "temperature"))
+def _decode_loop(params, cfg: ArchConfig, caches, first_tokens, start_pos,
+                 key, steps: int, temperature: float):
+    def body(carry, _):
+        tokens, pos, caches, key = carry
+        logits, caches = M.forward_decode(params, cfg, tokens, pos, caches)
+        logits = logits[:, 0].astype(jnp.float32)
+        key, k_s = jax.random.split(key)
+        if temperature > 0:
+            nxt = jax.random.categorical(k_s, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = nxt.astype(jnp.int32)
+        if cfg.n_codebooks > 1:
+            out_tok = nxt[:, None, :] if nxt.ndim == 2 else nxt[:, None]
+        else:
+            out_tok = nxt[:, None]
+        return (out_tok, pos + 1, caches, key), out_tok[:, 0]
+
+    carry = (first_tokens, start_pos, caches, key)
+    (_, _, caches, _), toks = jax.lax.scan(body, carry, None, length=steps)
+    return jnp.moveaxis(toks, 0, 1), caches      # (B, steps[, K])
+
+
+def generate(params, cfg: ArchConfig, prompt: Array, *, steps: int = 32,
+             temperature: float = 0.0, key: Optional[Array] = None,
+             img: Optional[Array] = None):
+    """prompt: (B, T0[, K]) int32 → generated (B, steps[, K])."""
+    key = key if key is not None else jax.random.key(0)
+    b, t0 = prompt.shape[:2]
+    max_len = t0 + steps + 1
+    h_last, caches, _ = M.forward_prefill(params, cfg, prompt,
+                                          max_len=max_len, img=img)
+    logits = M.unembed(M.cast_params(params, cfg), cfg,
+                       h_last)[:, 0].astype(jnp.float32)
+    if temperature > 0:
+        first = jax.random.categorical(jax.random.fold_in(key, 7),
+                                       logits / temperature, axis=-1)
+    else:
+        first = jnp.argmax(logits, axis=-1)
+    first = first.astype(jnp.int32)
+    first = first[:, None] if cfg.n_codebooks <= 1 else first[:, None, :]
+    out, caches = _decode_loop(params, cfg, caches, first,
+                               jnp.asarray(t0, jnp.int32), key, steps,
+                               temperature)
+    return out

@@ -1,0 +1,137 @@
+"""SMC (particle-filter) decoding — the paper's technique as a first-class
+serving feature (DESIGN.md §5).
+
+Each prompt carries K particles = decode hypotheses.  The proposal is the
+model at temperature τ (flattened for exploration); the target is the
+model at temperature 1.  Importance weights accumulate
+log p(tok) − log q(tok); when the per-prompt effective sample size decays
+below ``ess_frac·K``, particles are resampled systematically and their KV
+caches are gathered by ancestor index — the *compressed particles* idea of
+paper §V: only ancestor indices + multiplicities are exchanged, replica
+"creation" is a local cache gather.
+
+This mirrors SIR (paper Alg. 1) exactly:
+  propose (sample token) → weight (importance ratio) → ESS check →
+  resample (systematic, cache gather).
+The per-prompt log-normalizer estimate Σ log mean w is returned, which is
+the SMC estimate of log p(sequence continuation mass) — useful for
+best-of-K reranking at no extra model cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import resampling
+from repro.models.lm import model as M
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SMCDecodeConfig:
+    n_particles: int = 8         # K hypotheses per prompt
+    steps: int = 32
+    proposal_temperature: float = 1.5
+    ess_frac: float = 0.5
+    resampler: str = "systematic"
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "smc"))
+def _smc_loop(params, cfg: ArchConfig, smc: SMCDecodeConfig, caches,
+              first_tokens, start_pos, key):
+    k_part = smc.n_particles
+    counts_fn = resampling.RESAMPLERS[smc.resampler]
+
+    def body(carry, _):
+        tokens, pos, caches, lw, log_z, key = carry
+        logits, caches = M.forward_decode(params, cfg, tokens, pos, caches)
+        logits = logits[:, 0].astype(jnp.float32)       # (B·K, V)
+        p_log = jax.nn.log_softmax(logits, axis=-1)
+        q_log = jax.nn.log_softmax(logits / smc.proposal_temperature, -1)
+        key, k_s, k_r = jax.random.split(key, 3)
+        tok = jax.random.categorical(k_s, q_log, axis=-1)   # proposal draw
+        inc = (jnp.take_along_axis(p_log, tok[:, None], -1)
+               - jnp.take_along_axis(q_log, tok[:, None], -1))[:, 0]
+        lw = lw + inc.reshape(lw.shape)                      # (B, K)
+
+        # per-prompt ESS and resampling decision
+        wn = jax.nn.softmax(lw, axis=-1)
+        ess = 1.0 / jnp.sum(jnp.square(wn), axis=-1)         # (B,)
+        need = ess < smc.ess_frac * k_part
+
+        def resample_one(key_i, lw_i):
+            counts = counts_fn(key_i, lw_i, k_part, capacity=k_part)
+            return resampling.counts_to_ancestors(counts, k_part)
+
+        b = lw.shape[0]
+        anc = jax.vmap(resample_one)(jax.random.split(k_r, b), lw)  # (B, K)
+        identity = jnp.broadcast_to(jnp.arange(k_part), (b, k_part))
+        anc = jnp.where(need[:, None], anc, identity)
+        # log-normalizer increment (before weight reset)
+        log_z = log_z + jnp.where(
+            need,
+            jax.scipy.special.logsumexp(lw, axis=-1) - jnp.log(k_part),
+            0.0)
+        lw = jnp.where(need[:, None], jnp.zeros_like(lw), lw)
+
+        # compressed-particle cache exchange: gather by ancestor index
+        flat_anc = (anc + jnp.arange(b)[:, None] * k_part).reshape(-1)
+
+        def gather(x):
+            return x[flat_anc] if x.ndim >= 1 and x.shape[0] == b * k_part \
+                else x
+
+        caches = jax.tree_util.tree_map(_make_gather(flat_anc, b * k_part),
+                                        caches)
+        tok = tok.reshape(b * k_part)[flat_anc]
+        out_tok = tok[:, None].astype(jnp.int32)
+        return (out_tok, pos + 1, caches, lw, log_z, key), \
+            (out_tok[:, 0], ess)
+
+    b_k = first_tokens.shape[0]
+    b = b_k // k_part
+    lw0 = jnp.zeros((b, k_part), jnp.float32)
+    carry = (first_tokens, start_pos, caches, lw0,
+             jnp.zeros((b,), jnp.float32), key)
+    (_, _, caches, lw, log_z, _), (toks, ess) = jax.lax.scan(
+        body, carry, None, length=smc.steps)
+    return jnp.moveaxis(toks, 0, 1), lw, log_z, ess
+
+
+def _make_gather(flat_anc, expect_dim):
+    def g(x):
+        if hasattr(x, "shape") and x.ndim >= 1 and x.shape[0] == expect_dim:
+            return x[flat_anc]
+        # stacked (scan-group) caches: particle axis is dim 1
+        if hasattr(x, "shape") and x.ndim >= 2 and x.shape[1] == expect_dim:
+            return x[:, flat_anc]
+        return x
+    return g
+
+
+def smc_decode(params, cfg: ArchConfig, prompt: Array,
+               smc: SMCDecodeConfig = SMCDecodeConfig(), *,
+               key: Array | None = None):
+    """prompt: (B, T0) → (sequences (B, K, steps), final log-weights (B, K),
+    log-normalizer estimates (B,), ess trace (steps, B))."""
+    key = key if key is not None else jax.random.key(0)
+    b, t0 = prompt.shape
+    k_part = smc.n_particles
+    # replicate each prompt K times along batch
+    prompt_rep = jnp.repeat(prompt, k_part, axis=0)
+    max_len = t0 + smc.steps + 1
+    h_last, caches, _ = M.forward_prefill(params, cfg, prompt_rep,
+                                          max_len=max_len)
+    logits = M.unembed(M.cast_params(params, cfg), cfg,
+                       h_last)[:, 0].astype(jnp.float32)
+    q0 = jax.nn.log_softmax(logits / smc.proposal_temperature, -1)
+    first = jax.random.categorical(jax.random.fold_in(key, 3), q0, axis=-1)
+    first = first[:, None].astype(jnp.int32)
+    toks, lw, log_z, ess = _smc_loop(params, cfg, smc, caches, first,
+                                     jnp.asarray(t0, jnp.int32), key)
+    return toks.reshape(b, k_part, smc.steps), lw, log_z, ess

@@ -1,0 +1,166 @@
+"""train_step / serve_step builders: grad accumulation, chunked vocab loss,
+mixed precision, remat — the pjit-lowered programs of the dry-run.
+
+Memory-critical design points:
+
+* **Chunked cross-entropy**: full logits for gemma3 at train_4k would be
+  1M tokens × 262k vocab — ~0.5 TB in bf16.  The loss therefore scans the
+  sequence in vocab-chunks: per chunk, logits → logsumexp → target logit,
+  nothing else survives.  Peak logits memory drops to B·chunk·V.
+* **Gradient accumulation**: the global batch is split into
+  ``num_microbatches`` slices scanned with summed grads, so activation
+  memory scales with the microbatch, not the batch.
+* remat policy is set per-arch (``ArchConfig.remat``) inside the layer
+  scan (``models.lm.model``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import constrain
+from repro.models.lm import model as M
+from repro.optim import OptConfig, adamw_update
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    num_microbatches: int = 1
+    xent_chunk: int = 512            # sequence positions per loss chunk
+    z_loss: float = 1e-4             # logit normalizer regularization
+    # "bfloat16" halves the dominant loss-stage HBM traffic (logits are the
+    # largest single tensor at 256k vocab); logsumexp still reduces in f32.
+    xent_logits_dtype: str = "float32"
+
+
+def chunked_xent(hidden: Array, params: dict, cfg: ArchConfig,
+                 targets: Array, chunk: int, z_loss: float,
+                 unroll: bool = False,
+                 logits_dtype: str = "float32") -> Array:
+    """Mean cross-entropy over (B, T) targets without materializing
+    (B, T, V) logits.  hidden: (B, T, D); targets: (B, T[, K])."""
+    b, t, d = hidden.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    n_chunks = t // chunk
+
+    def body(acc, i):
+        h_c = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
+        y_c = jax.lax.dynamic_slice_in_dim(targets, i * chunk, chunk, axis=1)
+        # under sequence parallelism the chunk must re-replicate its (small)
+        # T slice so the (huge) logits can take the vocab-sharded layout
+        h_c = constrain(h_c, "act")
+        logits = M.unembed(params, cfg, h_c)
+        if logits_dtype == "float32":
+            logits = logits.astype(jnp.float32)
+        # reduce in f32 regardless of the materialized logits dtype
+        lse = jax.scipy.special.logsumexp(
+            logits.astype(jnp.float32), axis=-1)
+        tgt = jnp.take_along_axis(logits, y_c[..., None],
+                                  axis=-1)[..., 0].astype(jnp.float32)
+        loss = jnp.sum(lse - tgt) + z_loss * jnp.sum(jnp.square(lse))
+        return acc + loss, None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(n_chunks), unroll=unroll)
+    n_tok = b * t * (cfg.n_codebooks if cfg.n_codebooks > 1 else 1)
+    return total / n_tok
+
+
+def _loss_fn(params: dict, cfg: ArchConfig, tc: TrainConfig, batch: dict):
+    tokens = batch["tokens"]
+    img = batch.get("image_embeds")
+    hidden, aux = M.forward_train(params, cfg, tokens, img)
+    cast = M.cast_params(params, cfg)
+    loss = chunked_xent(hidden, cast, cfg, batch["targets"], tc.xent_chunk,
+                        tc.z_loss, unroll=cfg.scan_unroll,
+                        logits_dtype=tc.xent_logits_dtype)
+    metrics = {"xent": loss}
+    if "moe_aux_loss" in aux:
+        loss = loss + aux["moe_aux_loss"]
+        metrics["moe_aux_loss"] = aux["moe_aux_loss"]
+        metrics["moe_drop_frac"] = aux["moe_drop_frac"]
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ArchConfig, opt: OptConfig,
+                    tc: TrainConfig = TrainConfig()):
+    """Returns train_step(params, opt_state, batch) → (params, opt_state,
+    metrics).  ``batch["tokens"]`` has the GLOBAL batch; microbatching
+    happens inside via scan."""
+
+    def train_step(params, opt_state, batch):
+        batch = {k: constrain(v, "batch_seq") if v.ndim == 2 else v
+                 for k, v in batch.items()}
+        m = tc.num_microbatches
+        if m == 1:
+            grads, metrics = jax.grad(
+                _loss_fn, has_aux=True)(params, cfg, tc, batch)
+        else:
+            def split(x):
+                return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, met_acc = carry
+                g, met = jax.grad(_loss_fn, has_aux=True)(params, cfg, tc, mb)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                met_acc = jax.tree_util.tree_map(jnp.add, met_acc, met)
+                return (g_acc, met_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            met0 = {"xent": 0.0, "loss": 0.0}
+            if cfg.moe:
+                met0.update(moe_aux_loss=0.0, moe_drop_frac=0.0)
+            met0 = {k: jnp.zeros((), jnp.float32) for k in met0}
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, met0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+            metrics = jax.tree_util.tree_map(lambda v: v / m, metrics)
+
+        params, opt_state, stats = adamw_update(grads, opt_state, params, opt)
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ArchConfig, mode: str, max_len: int = 0):
+    """mode ∈ {prefill, decode}.
+
+    prefill: (params, batch{tokens[, image_embeds]}) → (last-token logits,
+             caches)
+    decode:  (params, batch{tokens, pos, caches}) → (logits, caches)
+    """
+    if mode == "prefill":
+        def prefill_step(params, batch):
+            h_last, caches, _ = M.forward_prefill(
+                params, cfg, batch["tokens"],
+                max_len=max_len or batch["tokens"].shape[1],
+                img=batch.get("image_embeds"))
+            cast = M.cast_params(params, cfg)
+            return M.unembed(cast, cfg, h_last), caches
+        return prefill_step
+
+    if mode == "decode":
+        def decode_step(params, batch):
+            logits, caches = M.forward_decode(
+                params, cfg, batch["tokens"], batch["pos"], batch["caches"])
+            return logits, caches
+        return decode_step
+
+    raise ValueError(mode)

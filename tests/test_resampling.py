@@ -1,0 +1,82 @@
+"""Property tests for the local resampling schemes (paper Alg. 1 line 17)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import resampling as R
+from repro.core.particles import normalized_weights
+
+SCHEMES = list(R.RESAMPLERS)
+
+
+@st.composite
+def weights_and_n(draw):
+    n_in = draw(st.integers(4, 200))
+    lw = draw(st.lists(st.floats(-30, 5, allow_nan=False), min_size=n_in,
+                       max_size=n_in))
+    n_out = draw(st.integers(1, 256))
+    seed = draw(st.integers(0, 2 ** 16))
+    return jnp.asarray(lw, jnp.float32), n_out, seed
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@given(args=weights_and_n())
+@settings(max_examples=30, deadline=None)
+def test_counts_sum_to_n_out(scheme, args):
+    """Σ offspring counts == n_out — particle-count conservation."""
+    lw, n_out, seed = args
+    counts = R.RESAMPLERS[scheme](jax.random.key(seed), lw, n_out,
+                                  capacity=max(n_out, lw.shape[0]))
+    assert int(counts.sum()) == n_out
+    assert int(counts.min()) >= 0
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@given(args=weights_and_n())
+@settings(max_examples=20, deadline=None)
+def test_zero_weight_never_resampled(scheme, args):
+    lw, n_out, seed = args
+    lw = lw.at[0].set(-jnp.inf)
+    counts = R.RESAMPLERS[scheme](jax.random.key(seed), lw, n_out,
+                                  capacity=max(n_out, lw.shape[0]))
+    assert int(counts[0]) == 0
+
+
+def test_counts_ancestors_roundtrip():
+    counts = jnp.asarray([3, 0, 2, 1, 0, 2], jnp.int32)
+    anc = R.counts_to_ancestors(counts, 8)
+    back = R.ancestors_to_counts(anc, 6)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(counts))
+
+
+@pytest.mark.parametrize("scheme", ["systematic", "stratified", "residual",
+                                    "multinomial"])
+def test_unbiasedness(scheme):
+    """E[counts_i] ≈ n_out · w_i over many seeds (resampling unbiasedness)."""
+    lw = jnp.log(jnp.asarray([0.05, 0.1, 0.15, 0.3, 0.4]))
+    n_out = 64
+    total = np.zeros(5)
+    reps = 300
+    for s in range(reps):
+        c = R.RESAMPLERS[scheme](jax.random.key(s), lw, n_out, capacity=64)
+        total += np.asarray(c)
+    emp = total / (reps * n_out)
+    w = np.asarray(normalized_weights(lw))
+    np.testing.assert_allclose(emp, w, atol=0.01)
+
+
+def test_systematic_variance_lower_than_multinomial():
+    """Systematic resampling is a variance-reduction over multinomial."""
+    lw = jnp.log(jnp.linspace(0.1, 1.0, 32))
+    n_out = 128
+
+    def var_of(scheme):
+        counts = np.stack([
+            np.asarray(R.RESAMPLERS[scheme](jax.random.key(s), lw, n_out,
+                                            capacity=128))
+            for s in range(200)])
+        return counts.var(axis=0).mean()
+
+    assert var_of("systematic") < var_of("multinomial")

@@ -1,0 +1,55 @@
+"""End-to-end behaviour tests for the whole system (paper pipeline +
+framework substrate glued together)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import SIRConfig, ParallelParticleFilter
+from repro.core.distributed import DRAConfig
+from repro.data.synthetic_movie import generate_movie, tracking_rmse
+from repro.models.tracking import TrackingConfig, make_tracking_model
+
+
+def test_paper_pipeline_end_to_end():
+    """Movie synthesis → SIR tracking → RMSE, the full §VII pipeline."""
+    cfg = TrackingConfig(img_size=(96, 96), v_init=1.0)
+    model = make_tracking_model(cfg)
+    movie = generate_movie(jax.random.key(0), cfg, n_frames=30)
+    pf = ParallelParticleFilter(
+        model=model, sir=SIRConfig(n_particles=8192, ess_frac=0.5))
+    res = pf.run(jax.random.key(1), movie.frames)
+    rmse = float(tracking_rmse(res.estimates, movie.trajectories[:, 0],
+                               warmup=10))
+    assert rmse < 1.5
+    assert bool(jnp.isfinite(res.log_marginal).all())
+    # ESS stays within (0, N]
+    assert 0 < float(res.ess.min()) <= 8192.0 + 1e-3
+
+
+def test_multi_spot_movie_single_target_lock():
+    """With several spots in frame, the filter locks onto one target and
+    stays locked (the paper's single-object scenario; Fig 4 shows many)."""
+    cfg = TrackingConfig(img_size=(96, 96), v_init=1.0)
+    model = make_tracking_model(cfg)
+    movie = generate_movie(jax.random.key(2), cfg, n_frames=30, n_spots=3)
+    pf = ParallelParticleFilter(
+        model=model, sir=SIRConfig(n_particles=8192, ess_frac=0.5))
+    res = pf.run(jax.random.key(3), movie.frames)
+    # with several equal-intensity spots the posterior is genuinely
+    # multimodal and the MMSE mean can wander between modes (no data
+    # association in the paper's single-target model) — assert it stays
+    # anchored to the spot set rather than diverging
+    est = res.estimates[-8:, None, :2]
+    gt = movie.trajectories[-8:]
+    d = jnp.linalg.norm(est - gt, axis=-1).min(axis=-1)
+    assert float(jnp.median(d)) < 8.0
+    assert float(d.min()) < 2.0          # locks a mode at least transiently
+
+
+def test_filter_api_selects_local_vs_sharded():
+    cfg = TrackingConfig(img_size=(64, 64))
+    model = make_tracking_model(cfg)
+    pf = ParallelParticleFilter(
+        model=model, sir=SIRConfig(n_particles=1024), mesh=None)
+    movie = generate_movie(jax.random.key(0), cfg, n_frames=5)
+    res = pf.run(jax.random.key(1), movie.frames)
+    assert res.estimates.shape == (5, 5)

@@ -1,0 +1,98 @@
+"""Multi-device (8 CPU) checks for the distributed resampling algorithms.
+
+Run as a subprocess by tests/test_distributed.py so the pytest process
+keeps its single default device.  Prints one JSON dict.
+"""
+import json
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                      # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+
+from repro.core import SIRConfig, ParallelParticleFilter   # noqa: E402
+from repro.core.distributed import DRAConfig               # noqa: E402
+from repro.core import dlb                                  # noqa: E402
+from repro.launch.mesh import make_host_mesh                # noqa: E402
+from repro.models.tracking import (TrackingConfig,          # noqa: E402
+                                   make_tracking_model)
+from repro.data.synthetic_movie import (generate_movie,     # noqa: E402
+                                        tracking_rmse)
+from jax.sharding import PartitionSpec as P                 # noqa: E402
+
+
+def dra_checks() -> dict:
+    out = {}
+    cfg = TrackingConfig(img_size=(64, 64), v_init=1.5)
+    model = make_tracking_model(cfg)
+    movie = generate_movie(jax.random.key(0), cfg, n_frames=25)
+    mesh = make_host_mesh(8)
+    for kind, extra in [("mpf", {}), ("rna", {"exchange_ratio": 0.25}),
+                        ("arna", {}), ("rpa", {"scheduler": "gs"}),
+                        ("rpa", {"scheduler": "sgs"}),
+                        ("rpa", {"scheduler": "lgs"})]:
+        tag = kind + "_" + extra.get("scheduler", "")
+        pf = ParallelParticleFilter(
+            model=model, sir=SIRConfig(n_particles=8192, ess_frac=0.5),
+            dra=DRAConfig(kind=kind, **extra), mesh=mesh)
+        res = pf.run(jax.random.key(1), movie.frames)
+        rmse = float(tracking_rmse(res.estimates, movie.trajectories[:, 0],
+                                   warmup=10))
+        out[tag] = {
+            "rmse": rmse,
+            "ess_min": float(res.ess.min()),
+            "estimates_finite": bool(np.isfinite(
+                np.asarray(res.estimates)).all()),
+            "log_marginal_finite": bool(np.isfinite(
+                np.asarray(res.log_marginal)).all()),
+        }
+        if kind == "arna":
+            out[tag]["p_eff_max"] = float(np.asarray(res.diag["p_eff"]).max())
+            out[tag]["p_eff_min"] = float(np.asarray(res.diag["p_eff"]).min())
+        if kind == "rpa":
+            out[tag]["overflow_total"] = int(
+                np.asarray(res.diag["overflow"]).sum())
+            out[tag]["links_max"] = int(np.asarray(res.diag["links"]).max())
+    return out
+
+
+def routing_conservation() -> dict:
+    """route_compressed conserves total multiplicity exactly (paper §V)."""
+    mesh = make_host_mesh(8)
+    p = 8
+    c = 64
+
+    def shard_fn(counts, states):
+        counts = counts[0]            # strip the sharded leading dim
+        states = states[0]
+        my = jax.lax.axis_index("data")
+        alloc = jax.lax.all_gather(jnp.sum(counts), "data")
+        targets = dlb.balanced_targets(jnp.sum(alloc), p)
+        schedule = dlb.schedule_sgs(alloc, targets)
+        route = dlb.route_compressed(states, counts, jnp.zeros((c,)),
+                                     schedule[my], k_cap=32,
+                                     axis_name="data")
+        kept = jnp.sum(route.kept_counts)
+        received = jnp.sum(route.recv_counts)
+        return (kept + received)[None], route.overflow_units[None]
+
+    key = jax.random.key(3)
+    counts = jax.random.randint(key, (p, c), 0, 40, dtype=jnp.int32)
+    states = jax.random.normal(key, (p, c, 5))
+    fn = jax.shard_map(shard_fn, mesh=mesh,
+                       in_specs=(P("data", None), P("data", None, None)),
+                       out_specs=(P("data"), P("data")),
+                       check_vma=False)
+    totals, overflow = fn(counts, states)
+    return {
+        "total_before": int(counts.sum()),
+        "total_after": int(np.asarray(totals).sum()),
+        "overflow": int(np.asarray(overflow).sum()),
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps({"dra": dra_checks(),
+                      "routing": routing_conservation()}))
