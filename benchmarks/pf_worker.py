@@ -7,8 +7,6 @@ parent process (and every other benchmark) keeps seeing one device.
 """
 import argparse
 import json
-import os
-import sys
 import time
 
 
@@ -24,8 +22,8 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=2)
     args = ap.parse_args()
 
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={args.devices}")
+    from repro.core import runtime
+    runtime.simulate_host_devices(args.devices)
     import jax
     import jax.numpy as jnp
     from repro.core import SIRConfig, ParallelParticleFilter

@@ -50,3 +50,33 @@ def device_counts(limit: int = 8) -> list[int]:
     harness measures true efficiency unchanged.
     """
     return [1, 2, 4, 8][: max(1, limit.bit_length())]
+
+
+def smoke() -> list[dict]:
+    """CI-sized sweep over the simulated-device harness: one local run and
+    two 2-device DRA runs, minutes not hours.  Exercises the same
+    worker/runtime path as the full figure harnesses."""
+    cases = [(1, "rna", "lgs"), (2, "rna", "lgs"), (2, "rpa", "lgs")]
+    results = []
+    for devices, dra, sched in cases:
+        r = run_worker(devices, dra, particles=2048, scheduler=sched,
+                       frames=8, img=48, repeats=1)
+        results.append(r)
+        print(json.dumps(r), flush=True)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (simulated 1/2-device meshes)")
+    args = ap.parse_args()
+    if args.smoke:
+        res = smoke()
+        assert all(r["rmse"] < 50.0 for r in res), res
+        print(f"scaling smoke OK: {len(res)} configurations")
+    else:
+        ap.error("only --smoke is wired here; run benchmarks/run.py or the "
+                 "fig5/7/8 harnesses for the full sweeps")

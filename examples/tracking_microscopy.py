@@ -12,8 +12,6 @@ Multi-device runs re-exec themselves with XLA_FLAGS so the parent Python
 session is untouched.
 """
 import argparse
-import os
-import sys
 import time
 
 
@@ -32,12 +30,8 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.devices > 1 and not args._respawned:
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
-                            f"{args.devices}")
-        os.execve(sys.executable,
-                  [sys.executable, __file__] + sys.argv[1:] + ["--_respawned"],
-                  env)
+        from repro.core import runtime
+        runtime.respawn_with_host_devices(args.devices, script=__file__)
 
     import jax
     from repro.core import SIRConfig, ParallelParticleFilter

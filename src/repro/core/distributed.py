@@ -17,8 +17,9 @@ Four DRA families, exactly the paper's taxonomy:
   compressed particles.
 
 All functions here are *per-shard* programs: they use collectives with an
-``axis_name`` and are meant to be called inside ``shard_map`` (see
-``repro.core.filters`` for the user-facing driver).
+``axis_name`` (always through the ``repro.core.runtime`` facade) and are
+meant to be called inside ``shard_map`` (see ``repro.core.filters`` for
+the user-facing driver).
 """
 from __future__ import annotations
 
@@ -30,9 +31,13 @@ import jax.numpy as jnp
 
 from repro.core import dlb
 from repro.core import resampling
+from repro.core import runtime
 from repro.core.particles import log_sum_weights
+from repro.kernels import resample as resample_kernel
 
 Array = jax.Array
+
+RESAMPLE_BACKENDS = ("auto", "pallas", "jnp")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +47,10 @@ class DRAConfig:
     kind: str = "rna"               # mpf | rna | arna | rpa
     resampler: str = "systematic"
     ess_frac: float = 0.5            # N_threshold = ess_frac * N (Alg. 1)
+    # local-resampling backend: "pallas" = fused CDF+bisection kernel
+    # (interpret mode off-TPU), "jnp" = pure-XLA comb, "auto" = pallas on
+    # TPU, jnp elsewhere.  Only the systematic scheme has a kernel.
+    resample_backend: str = "auto"
     # RNA / ARNA
     exchange_ratio: float = 0.10     # paper's 10%–50%
     q_min: float = 0.05              # ARNA adaptive range
@@ -56,16 +65,41 @@ class DRAConfig:
         assert self.kind in ("mpf", "rna", "arna", "rpa"), self.kind
         assert self.scheduler in dlb.SCHEDULERS, self.scheduler
         assert self.resampler in resampling.RESAMPLERS, self.resampler
+        assert self.resample_backend in RESAMPLE_BACKENDS, self.resample_backend
+        # an explicit kernel request must not silently fall back: only the
+        # systematic scheme has a kernel
+        if self.resample_backend == "pallas":
+            assert self.resampler == "systematic", (
+                f"resample_backend='pallas' requires resampler='systematic', "
+                f"got {self.resampler!r}")
 
 
 def _axis_size(axis_name: str) -> int:
-    return jax.lax.axis_size(axis_name)
+    return runtime.axis_size(axis_name)
+
+
+def use_pallas_resample(cfg: DRAConfig, n_out) -> bool:
+    """Whether the local resample runs through the Pallas kernel.
+
+    The kernel covers the static-shape systematic path (MPF/RNA/ARNA local
+    step, where ``n_out`` is the python-int slot count C); RPA's traced
+    per-shard allocation stays on the jnp comb (DESIGN.md §2.1).
+    """
+    if cfg.resample_backend == "jnp" or cfg.resampler != "systematic":
+        return False
+    if not isinstance(n_out, int):
+        return False
+    if not resample_kernel.kernel_applicable(n_out):
+        return False
+    if cfg.resample_backend == "pallas":
+        return True
+    return jax.default_backend() == "tpu"       # auto
 
 
 def _shard_log_z(log_weights: Array, axis_name: str) -> tuple[Array, Array]:
     """(local logZ, gathered (P,) vector of all shards' logZ)."""
     local = log_sum_weights(log_weights)
-    return local, jax.lax.all_gather(local, axis_name)
+    return local, runtime.all_gather(local, axis_name)
 
 
 def global_log_z(log_weights: Array, axis_name: str) -> Array:
@@ -77,7 +111,7 @@ def global_ess(log_weights: Array, axis_name: str) -> Array:
     """Global N_eff (Alg. 1 line 15) with one psum."""
     glz = global_log_z(log_weights, axis_name)
     sq = jnp.sum(jnp.exp(2.0 * (log_weights - glz)), where=jnp.isfinite(log_weights))
-    return 1.0 / jnp.maximum(jax.lax.psum(sq, axis_name), 1e-38)
+    return 1.0 / jnp.maximum(runtime.psum(sq, axis_name), 1e-38)
 
 
 def effective_processes(log_weights: Array, axis_name: str) -> Array:
@@ -100,11 +134,25 @@ def _local_resample_materialize(key: Array, state: Any, log_weights: Array,
     Returns (state, counts).  Offspring counts follow the configured local
     scheme; materialization (counts → replicas) is the paper's deferred
     expansion, done here because no routing follows (MPF/RNA path).
+
+    When ``cfg.resample_backend`` selects the Pallas kernel (and the
+    scheme/shape qualify, see ``use_pallas_resample``) ancestors come from
+    the fused CDF+bisection kernel on the same shared-uniform comb, so the
+    offspring distribution is identical to the jnp comb up to 1-ulp CDF
+    ties.
     """
     c = log_weights.shape[0]
-    counts_fn = resampling.RESAMPLERS[cfg.resampler]
-    counts = counts_fn(key, log_weights, n_out, capacity=c)
-    ancestors = resampling.counts_to_ancestors(counts, c)
+    # the kernel materializes exactly n_out rows while the jnp path pads to
+    # C, so the kernel only serves the full-ensemble case (all callers today)
+    if n_out == c and use_pallas_resample(cfg, n_out):
+        u = jax.random.uniform(key, ())
+        ancestors = resample_kernel.systematic_ancestors_auto(
+            log_weights, u, n_out=n_out)
+        counts = resampling.ancestors_to_counts(ancestors, c)
+    else:
+        counts_fn = resampling.RESAMPLERS[cfg.resampler]
+        counts = counts_fn(key, log_weights, n_out, capacity=c)
+        ancestors = resampling.counts_to_ancestors(counts, c)
     new_state = jax.tree_util.tree_map(lambda x: x[ancestors], state)
     return new_state, counts
 
@@ -145,8 +193,8 @@ def _ring_exchange(state: Any, log_weights: Array, m_buf: int, m_valid: Array,
     def ring(args):
         s, lw = args
         r_s = jax.tree_util.tree_map(
-            lambda x: jax.lax.ppermute(x, axis_name, perm), s)
-        r_lw = jax.lax.ppermute(lw, axis_name, perm)
+            lambda x: runtime.ppermute(x, axis_name, perm), s)
+        r_lw = runtime.ppermute(lw, axis_name, perm)
         return r_s, r_lw
 
     def mix(args):
@@ -155,7 +203,7 @@ def _ring_exchange(state: Any, log_weights: Array, m_buf: int, m_valid: Array,
 
         def a2a(x):
             y = x[: b * p].reshape((p, b) + x.shape[1:])
-            y = jax.lax.all_to_all(y, axis_name, split_axis=0, concat_axis=0)
+            y = runtime.all_to_all(y, axis_name, split_axis=0, concat_axis=0)
             y = y.reshape((b * p,) + x.shape[1:])
             return jnp.concatenate([y, x[b * p:]], axis=0)
 
@@ -221,7 +269,7 @@ def arna_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
     m_valid = jnp.ceil(q * c).astype(jnp.int32)
     m_valid = jnp.minimum(m_valid, m_buf)
 
-    lost = jax.lax.pmax(max_log_lik, axis_name) < cfg.lost_log_lik
+    lost = runtime.pmax(max_log_lik, axis_name) < cfg.lost_log_lik
     state, lw = _ring_exchange(state, lw, m_buf, m_valid, axis_name,
                                shuffle=lost)
     return state, lw, {
@@ -238,7 +286,7 @@ def rpa_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
     compressed particles (paper §III–§V)."""
     c = log_weights.shape[0]
     p = _axis_size(axis_name)
-    my = jax.lax.axis_index(axis_name)
+    my = runtime.axis_index(axis_name)
     n_total = c * p
     cap_units = int(round(cfg.slack * c))
 
@@ -264,7 +312,7 @@ def rpa_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
     lw = jnp.where(valid, -jnp.log(n_total), -jnp.inf)
     stats = dlb.schedule_stats(schedule)
     return out_state, lw, {
-        "overflow": jax.lax.psum(route.overflow_units, axis_name),
+        "overflow": runtime.psum(route.overflow_units, axis_name),
         "links": stats["links"],
         "units_moved": stats["units_moved"],
         "max_message_units": stats["max_message_units"],

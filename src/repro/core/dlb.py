@@ -34,6 +34,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import runtime
+
 Array = jax.Array
 
 
@@ -201,7 +203,7 @@ def route_compressed(state: Any, counts: Array, log_weights: Array,
         sent.reshape(-1))
     kept_counts = counts - shipped_per_particle
 
-    a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_name,
+    a2a = functools.partial(runtime.all_to_all, axis_name=axis_name,
                             split_axis=0, concat_axis=0, tiled=False)
     recv_state = jax.tree_util.tree_map(a2a, send_state)
     recv_counts = a2a(sent)

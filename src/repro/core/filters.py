@@ -3,6 +3,8 @@
 ``ParallelParticleFilter`` hides mesh setup, ``shard_map`` plumbing, PRNG
 sharding, and the scan over frames — the paper's stated goal of "hiding the
 difficulties of efficient parallel programming of PF algorithms" (§I).
+All SPMD entry points come from ``repro.core.runtime`` so the driver runs
+unchanged across JAX versions.
 """
 from __future__ import annotations
 
@@ -14,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import distributed as dist
+from repro.core import runtime
 from repro.core import smc
 
 Array = jax.Array
@@ -66,7 +69,7 @@ class ParallelParticleFilter:
 
         def shard_fn(key, obs):
             # per-shard RNG stream
-            idx = jax.lax.axis_index(self.axis_name)
+            idx = runtime.axis_index(self.axis_name)
             k_init, k_run = jax.random.split(jax.random.fold_in(key, idx))
             state = self.model.init_sampler(k_init, c)
             lw = jnp.full((c,), -jnp.log(float(n)))
@@ -74,16 +77,15 @@ class ParallelParticleFilter:
             return outs, carry[1]
 
         spec_particles = P(self.axis_name)
-        fn = jax.shard_map(
+        fn = runtime.shard_map(
             shard_fn,
-            mesh=mesh,
+            mesh,
             in_specs=(P(), P()),              # key + observations replicated
             out_specs=(
                 smc.StepOutput(estimate=P(), ess=P(), log_marginal=P(),
                                resampled=P(), diag=P()),
                 spec_particles,
             ),
-            check_vma=False,
         )
         outs, final_state = jax.jit(fn)(key, observations)
         return FilterResult(outs.estimate, outs.ess, outs.log_marginal,

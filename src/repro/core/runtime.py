@@ -1,0 +1,176 @@
+"""Version-portable distributed runtime facade (DESIGN.md §2, §6).
+
+Every SPMD primitive the PPF library touches — ``shard_map``, mesh
+construction, the collectives the DRAs are built from (``psum``,
+``all_gather``, ``ppermute``, ``all_to_all``, ...) and the simulated
+host-device harness — goes through this module.  JAX has moved these
+entry points repeatedly (``jax.experimental.shard_map.shard_map`` →
+``jax.shard_map``; ``check_rep`` → ``check_vma``; ``jax.make_mesh``
+growing ``axis_types``; ``jax.lax.axis_size`` appearing), so call sites
+importing them directly rot with every upgrade.  The facade resolves the
+installed API once at import time; nothing else in ``src/`` or ``tests/``
+may spell a ``jax.shard_map``-style path directly.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+Array = jax.Array
+
+__all__ = [
+    "shard_map", "make_mesh", "host_mesh",
+    "psum", "pmean", "pmax", "pmin", "psum_scatter",
+    "all_gather", "ppermute", "all_to_all", "axis_index", "axis_size",
+    "simulate_host_devices", "respawn_with_host_devices",
+    "host_device_env", "HOST_DEVICE_FLAG",
+]
+
+
+# ---------------------------------------------------------------------------
+# shard_map (the one SPMD entry point)
+# ---------------------------------------------------------------------------
+
+def _resolve_shard_map() -> tuple[Callable, str]:
+    fn = getattr(jax, "shard_map", None)        # public API, JAX >= 0.6
+    if fn is not None:
+        return fn, "check_vma"
+    from jax.experimental import shard_map as _sm   # JAX 0.4.x / 0.5.x
+    return _sm.shard_map, "check_rep"
+
+
+_SHARD_MAP, _CHECK_KW = _resolve_shard_map()
+
+
+def shard_map(f: Callable, mesh, *, in_specs, out_specs,
+              check_replication: bool = False) -> Callable:
+    """Map ``f`` as an SPMD program over ``mesh``.
+
+    ``check_replication`` maps onto whichever replication-checking kwarg
+    the installed JAX spells (``check_rep`` before 0.6, ``check_vma``
+    after); the library always runs with it off because the DRAs splice
+    per-shard buffers whose replication the checker cannot prove.
+    """
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_replication})
+
+
+# ---------------------------------------------------------------------------
+# Collectives (per-shard programs only — need an enclosing shard_map)
+# ---------------------------------------------------------------------------
+
+psum = jax.lax.psum
+pmean = jax.lax.pmean
+pmax = jax.lax.pmax
+pmin = jax.lax.pmin
+psum_scatter = jax.lax.psum_scatter
+all_gather = jax.lax.all_gather
+ppermute = jax.lax.ppermute
+all_to_all = jax.lax.all_to_all
+axis_index = jax.lax.axis_index
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis, from inside a shard_map body.
+
+    ``jax.lax.axis_size`` only exists in newer JAX; on older versions
+    ``psum`` of the python literal 1 constant-folds at trace time to the
+    axis size, so the result is a plain ``int`` either way (callers use
+    it in ``range()`` and shape arithmetic).
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction
+# ---------------------------------------------------------------------------
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices: Sequence[Any] | None = None):
+    """``jax.make_mesh`` across JAX versions.
+
+    Newer JAX wants ``axis_types`` to pin the axes to Auto sharding mode;
+    older JAX rejects the kwarg (everything is Auto).  Oldest JAX has no
+    ``jax.make_mesh`` at all — fall back to reshaping the device list.
+    """
+    maker = getattr(jax, "make_mesh", None)
+    if maker is not None:
+        axis_type = getattr(jax.sharding, "AxisType", None)
+        if axis_type is not None:
+            return maker(axis_shapes, axis_names,
+                         axis_types=(axis_type.Auto,) * len(axis_names),
+                         devices=devices)
+        return maker(axis_shapes, axis_names, devices=devices)
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    return jax.sharding.Mesh(devs.reshape(tuple(axis_shapes)), axis_names)
+
+
+def host_mesh(n: int | None = None, axis: str = "data"):
+    """1-D mesh over the first ``n`` available devices (PF scaling runs)."""
+    devs = jax.devices()[: (n or len(jax.devices()))]
+    return jax.sharding.Mesh(np.array(devs), (axis,))
+
+
+# ---------------------------------------------------------------------------
+# Simulated multi-device CPU harness (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _with_host_device_flag(flags: str, n: int) -> str:
+    """Replace/append the host-device-count flag in an XLA_FLAGS string."""
+    kept = [t for t in flags.split() if not t.startswith(HOST_DEVICE_FLAG)]
+    return " ".join(kept + [f"{HOST_DEVICE_FLAG}={n}"])
+
+
+def host_device_env(n: int, env: dict | None = None) -> dict:
+    """Copy of ``env`` (default: os.environ) with XLA_FLAGS requesting
+    ``n`` simulated host devices — for launching subprocess workers."""
+    env = dict(os.environ if env is None else env)
+    env["XLA_FLAGS"] = _with_host_device_flag(env.get("XLA_FLAGS", ""), n)
+    return env
+
+
+def simulate_host_devices(n: int, *, strict: bool = True) -> int:
+    """Expose ``n`` simulated CPU devices to this process.
+
+    Must run before JAX initialises its backend (importing ``jax`` is
+    fine; creating an array or listing devices is not).  Returns the
+    device count actually visible; with ``strict`` raises if the backend
+    was already up with fewer devices — in that case use
+    ``respawn_with_host_devices`` or set XLA_FLAGS in the launcher.
+    """
+    os.environ["XLA_FLAGS"] = host_device_env(n)["XLA_FLAGS"]
+    got = jax.device_count()
+    if strict and got < n:
+        raise RuntimeError(
+            f"asked for {n} simulated host devices but the JAX backend is "
+            f"already initialised with {got}; call simulate_host_devices "
+            f"before any device use, or respawn_with_host_devices")
+    return got
+
+
+def respawn_with_host_devices(n: int, module: str | None = None, *,
+                              script: str | None = None,
+                              sentinel: str = "--_respawned") -> None:
+    """Re-exec this CLI with ``n`` simulated devices.
+
+    Pass ``module`` for ``python -m module`` entry points or ``script``
+    for path-invoked ones.  For CLIs that parse args before touching JAX.
+    The sentinel flag marks the respawned process so it doesn't recurse;
+    the caller is responsible for accepting (and ignoring) it.  Never
+    returns.
+    """
+    assert (module is None) != (script is None), "pass module OR script"
+    entry = [script] if script is not None else ["-m", module]
+    os.execve(sys.executable,
+              [sys.executable] + entry + sys.argv[1:] + [sentinel],
+              host_device_env(n))

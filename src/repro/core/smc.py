@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import distributed as dist
 from repro.core import resampling
+from repro.core import runtime
 from repro.core.particles import (effective_sample_size, normalized_weights)
 
 Array = jax.Array
@@ -115,7 +116,7 @@ def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
     def step(carry, observation):
         key, state, lw = carry
         c = lw.shape[0]
-        p = jax.lax.axis_size(axis_name)
+        p = runtime.axis_size(axis_name)
         n_total = c * p
         key, k_dyn, k_res = jax.random.split(key, 3)
 
@@ -130,7 +131,7 @@ def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
         # MMSE estimate with globally normalized weights (one psum)
         w = jnp.exp(jnp.where(jnp.isfinite(lw), lw - glz, -jnp.inf))
         estimate = jax.tree_util.tree_map(
-            lambda x: jax.lax.psum(jnp.tensordot(w.astype(x.dtype), x, axes=1),
+            lambda x: runtime.psum(jnp.tensordot(w.astype(x.dtype), x, axes=1),
                                    axis_name), state)
 
         do_resample = jnp.logical_or(ess < cfg.ess_frac * n_total,

@@ -50,8 +50,11 @@ def _kernel(u_ref, lw_ref, anc_ref, cdf_ref, *, n_in: int, n_out: int,
 
     lo = jnp.zeros((block,), jnp.int32)
     hi = jnp.full((block,), n_in, jnp.int32)
-    # invariant: cdf[lo-1] <= pos < cdf[hi]; find first index with cdf > pos
-    for _ in range(max(1, math.ceil(math.log2(max(n_in, 2))))):
+    # invariant: cdf[lo-1] <= pos < cdf[hi]; find first index with cdf > pos.
+    # the candidate range [0, n_in] holds n_in+1 values, so the bisection
+    # needs ceil(log2(n_in+1)) steps — one short leaves a 2-wide range and
+    # returns an ancestor one below the correct index.
+    for _ in range(max(1, math.ceil(math.log2(n_in + 1)))):
         mid = (lo + hi) // 2
         cm = cdf[mid]
         go_right = cm <= pos
@@ -91,3 +94,29 @@ def pltpu_vmem(shape, dtype):
     """VMEM scratch allocation (kept separate for interpret-mode fallback)."""
     from jax.experimental.pallas import tpu as pltpu
     return pltpu.VMEM(shape, dtype)
+
+
+def pick_block(n_out: int, max_block: int = DEFAULT_BLOCK) -> int:
+    """Largest power-of-two block ≤ ``max_block`` dividing ``n_out``
+    (the kernel's grid requires ``n_out % block == 0``)."""
+    b = 1
+    while b * 2 <= max_block and n_out % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def kernel_applicable(n_out: int) -> bool:
+    """Whether the kernel grid is worth launching for this output size.
+    A tiny block (odd / small n_out) degenerates to a per-element grid."""
+    return pick_block(n_out) >= 8
+
+
+def systematic_ancestors_auto(log_weights: Array, u: Array, *,
+                              n_out: int | None = None) -> Array:
+    """Kernel entry point with backend-appropriate defaults: compiled on
+    TPU, interpret mode elsewhere (CPU CI, the simulated-device harness),
+    block size picked to divide ``n_out``."""
+    n_out = n_out or log_weights.shape[0]
+    return systematic_ancestors_kernel(
+        log_weights, u, n_out=n_out, block=pick_block(n_out),
+        interpret=jax.default_backend() != "tpu")

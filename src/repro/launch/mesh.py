@@ -2,23 +2,21 @@
 
 Functions, not module-level constants, so importing never touches jax
 device state (the dry-run must set XLA_FLAGS before first jax init).
+Construction goes through ``repro.core.runtime`` which resolves the
+installed JAX's mesh API (``axis_types`` support appeared mid-0.x).
 """
 from __future__ import annotations
 
-import jax
+from repro.core import runtime
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return runtime.make_mesh(shape, axes)
 
 
 def make_host_mesh(n: int | None = None, axis: str = "data"):
     """1-D mesh over however many (CPU) devices exist — used by the PF
     scaling benchmarks and tests."""
-    import numpy as np
-    devs = jax.devices()[: (n or len(jax.devices()))]
-    return jax.sharding.Mesh(np.array(devs), (axis,))
+    return runtime.host_mesh(n, axis)

@@ -5,8 +5,6 @@ particle decoding, optionally on a (data, model) mesh.
         --batch 4 --prompt-len 32 --steps 32 --mode smc
 """
 import argparse
-import os
-import sys
 import time
 
 
@@ -26,12 +24,8 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.devices > 1 and not args._respawned:
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
-                            f"{args.devices}")
-        os.execve(sys.executable, [sys.executable, "-m",
-                                   "repro.launch.serve"] + sys.argv[1:]
-                  + ["--_respawned"], env)
+        from repro.core import runtime
+        runtime.respawn_with_host_devices(args.devices, "repro.launch.serve")
 
     import jax
 

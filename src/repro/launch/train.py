@@ -14,8 +14,6 @@ code on the host-device mesh.  Fault-tolerance contract:
         --smoke --devices 4 --steps 50 --batch 8 --seq 128
 """
 import argparse
-import os
-import sys
 import time
 
 
@@ -37,12 +35,8 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.devices > 1 and not args._respawned:
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
-                            f"{args.devices}")
-        os.execve(sys.executable, [sys.executable, "-m",
-                                   "repro.launch.train"] + sys.argv[1:]
-                  + ["--_respawned"], env)
+        from repro.core import runtime
+        runtime.respawn_with_host_devices(args.devices, "repro.launch.train")
 
     import jax
     import numpy as np

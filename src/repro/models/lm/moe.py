@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
+from repro.core import runtime
 from repro.launch.sharding import constrain
 from repro.models.lm.layers import apply_mlp, mlp_params
 
@@ -180,7 +181,7 @@ def apply_moe_ep(p: dict, x: Array, cfg: MoEConfig) -> tuple[Array, dict]:
         send = buf[:, :cap].reshape(p_data, e_loc, cap, d)
 
         # ---- ONE fused all_to_all over the data axis (latency criterion)
-        recv = jax.lax.all_to_all(send, "data", split_axis=0, concat_axis=0)
+        recv = runtime.all_to_all(send, "data", split_axis=0, concat_axis=0)
         # recv: (P_src, E_loc, cap, D) → (E_loc, P_src·cap, D)
         hbuf = jnp.moveaxis(recv, 0, 1).reshape(e_loc, p_data * cap, d)
 
@@ -193,17 +194,17 @@ def apply_moe_ep(p: dict, x: Array, cfg: MoEConfig) -> tuple[Array, dict]:
         use_rs = (has_model and cfg.ep_reduce == "rs_ag"
                   and d % model_n == 0)
         if has_model and not use_rs:
-            y = jax.lax.psum(y, "model")            # row-parallel reduce
+            y = runtime.psum(y, "model")            # row-parallel reduce
         elif use_rs:
             # reduce-scatter the partial sums along D: the return route and
             # the combine then carry only D/TP per device.
-            y = jax.lax.psum_scatter(y, "model", scatter_dimension=2,
+            y = runtime.psum_scatter(y, "model", scatter_dimension=2,
                                      tiled=True)    # (E_loc, S, D/TP)
         d_eff = y.shape[-1]
 
         # ---- route results back (second all_to_all) ---------------------
         yb = jnp.moveaxis(y.reshape(e_loc, p_data, cap, d_eff), 1, 0)
-        back = jax.lax.all_to_all(yb, "data", split_axis=0, concat_axis=0)
+        back = runtime.all_to_all(yb, "data", split_axis=0, concat_axis=0)
         y_flat = back.reshape(e * cap, d_eff)       # same layout as `buf`
 
         idx = jnp.clip(flat_e * cap + slot, 0, e * cap - 1)
@@ -212,7 +213,7 @@ def apply_moe_ep(p: dict, x: Array, cfg: MoEConfig) -> tuple[Array, dict]:
         out = jnp.zeros((n_loc, d_eff), gathered.dtype).at[tok_idx].add(
             gathered * w)
         if use_rs:
-            out = jax.lax.all_gather(out, "model", axis=1, tiled=True)
+            out = runtime.all_gather(out, "model", axis=1, tiled=True)
 
         # aux (psum'd to replicated scalars)
         me = jnp.mean(probs, axis=0)
@@ -220,22 +221,21 @@ def apply_moe_ep(p: dict, x: Array, cfg: MoEConfig) -> tuple[Array, dict]:
         aux_l = cfg.router_aux_loss * e * jnp.sum(me * ce)
         naxes = tuple(a for a in ("pod", "data", "model")
                       if a in mesh.axis_names)
-        aux_l = jax.lax.pmean(aux_l, naxes)
-        drop = jax.lax.pmean(1.0 - jnp.mean(keep.astype(jnp.float32)), naxes)
+        aux_l = runtime.pmean(aux_l, naxes)
+        drop = runtime.pmean(1.0 - jnp.mean(keep.astype(jnp.float32)), naxes)
         load = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
-        maxl = jax.lax.pmax(jnp.max(load), naxes)
+        maxl = runtime.pmax(jnp.max(load), naxes)
         return out.reshape(bl, tl, d), aux_l, drop, maxl
 
-    out, aux_l, drop, maxl = jax.shard_map(
+    out, aux_l, drop, maxl = runtime.shard_map(
         shard_fn,
-        mesh=mesh,
+        mesh,
         in_specs=(P(ba, None, None),                # x (B, T, D)
                   P(None, None),                    # router (replicated)
                   P("data", None, "model"),         # we_gate (E, D, F)
                   P("data", None, "model"),         # we_up
                   P("data", "model", None)),        # we_down (E, F, D)
         out_specs=(P(ba, None, None), P(), P(), P()),
-        check_vma=False,
     )(x, p["router"], p["we_gate"], p["we_up"], p["we_down"])
 
     if "shared" in p:

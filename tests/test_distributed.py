@@ -51,6 +51,15 @@ def test_rpa_lgs_fewest_links(worker_output):
     assert d["rpa_lgs"]["links_max"] <= 4      # ≤ P/2 = 4 (paper Alg. 4)
 
 
+def test_pallas_resample_backend_runs_sharded(worker_output):
+    """DRAConfig(resample_backend="pallas") drives the Pallas systematic-
+    resampling kernel (interpret mode on CPU) inside the 8-shard scan."""
+    r = worker_output["dra"]["rna_pallas"]
+    assert r["estimates_finite"]
+    assert r["log_marginal_finite"]
+    assert r["ess_min"] > 0
+
+
 def test_routing_conserves_particles(worker_output):
     """Compressed routing conserves total multiplicity exactly — the
     particle-compression invariant of paper §V."""

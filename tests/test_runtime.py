@@ -1,0 +1,131 @@
+"""The version-portable runtime facade (repro.core.runtime) and the
+DRAConfig-selected Pallas resampling path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import distributed as dist
+from repro.core import resampling as R
+from repro.core import runtime
+from repro.core.distributed import DRAConfig
+from repro.kernels import resample as RK
+
+KEY = jax.random.key(0)
+
+
+def test_shard_map_resolves_on_installed_jax():
+    """The facade finds a working shard_map on this JAX version (the whole
+    point: jax.shard_map moved between 0.4.x and 0.6+)."""
+    mesh = runtime.host_mesh(1)
+    f = runtime.shard_map(lambda x: runtime.psum(x, "data"), mesh,
+                          in_specs=P("data"), out_specs=P())
+    np.testing.assert_allclose(f(jnp.arange(4.0)), jnp.arange(4.0))
+
+
+def test_axis_size_is_static_int():
+    """axis_size must come back as a python int (call sites use it in
+    range() and static shape arithmetic), on every JAX version."""
+    mesh = runtime.host_mesh(1)
+
+    def body(x):
+        p = runtime.axis_size("data")
+        assert isinstance(p, int), type(p)
+        return x * p
+
+    f = runtime.shard_map(body, mesh, in_specs=P("data"),
+                          out_specs=P("data"))
+    np.testing.assert_allclose(f(jnp.ones(2)), jnp.ones(2))
+
+
+def test_make_mesh_portable():
+    m = runtime.make_mesh((1, 1), ("data", "model"))
+    assert m.shape == {"data": 1, "model": 1}
+
+
+def test_host_device_flag_replacement():
+    got = runtime._with_host_device_flag(
+        f"--foo=1 {runtime.HOST_DEVICE_FLAG}=4", 8)
+    assert got == f"--foo=1 {runtime.HOST_DEVICE_FLAG}=8"
+    assert runtime._with_host_device_flag("", 2) == \
+        f"{runtime.HOST_DEVICE_FLAG}=2"
+
+
+def test_no_direct_shard_map_call_sites():
+    """src/ and tests/ must spell shard_map only through the facade."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
+    offenders = []
+    for d in ("src", "tests"):
+        for f in (root / d).rglob("*.py"):
+            if f.name == "runtime.py" or f == pathlib.Path(__file__):
+                continue
+            src = f.read_text()
+            if "jax.shard_map" in src or "experimental.shard_map" in src or \
+                    "experimental import shard_map" in src:
+                offenders.append(str(f))
+    assert not offenders, offenders
+
+
+# ---------------------------------------------------------------------------
+# Pallas resampling path (DRAConfig.resample_backend)
+# ---------------------------------------------------------------------------
+
+def test_backend_flag_validated():
+    with pytest.raises(AssertionError):
+        DRAConfig(resample_backend="cuda")
+    # an explicit kernel request with a kernel-less scheme is a config
+    # error, not a silent fallback
+    with pytest.raises(AssertionError):
+        DRAConfig(resample_backend="pallas", resampler="multinomial")
+
+
+def test_backend_selection_rules():
+    assert dist.use_pallas_resample(DRAConfig(resample_backend="pallas"), 1024)
+    # traced n_out (RPA allocation) stays on jnp
+    assert not dist.use_pallas_resample(
+        DRAConfig(resample_backend="pallas"), jnp.asarray(1024))
+    assert not dist.use_pallas_resample(DRAConfig(resample_backend="jnp"), 1024)
+    # "auto" on this (CPU) backend resolves to jnp; on TPU it would flip
+    if jax.default_backend() != "tpu":
+        assert not dist.use_pallas_resample(DRAConfig(), 1024)
+
+
+@pytest.mark.parametrize("n,seed", [(256, 0), (1024, 1), (768, 2)])
+def test_pallas_counts_match_jnp_resampler(n, seed):
+    """Count-distribution equivalence: the kernel path selected by
+    DRAConfig(resample_backend='pallas') must produce the same offspring
+    counts as the jnp systematic resampler for the same PRNG key (both
+    draw one shared uniform and walk the same comb)."""
+    key = jax.random.fold_in(KEY, seed)
+    lw = jax.random.normal(key, (n,)) * 3.0
+    state = jax.random.normal(jax.random.fold_in(key, 1), (n, 5))
+
+    st_p, counts_p = dist._local_resample_materialize(
+        key, state, lw, n, DRAConfig(resample_backend="pallas"))
+    st_j, counts_j = dist._local_resample_materialize(
+        key, state, lw, n, DRAConfig(resample_backend="jnp"))
+
+    counts_p, counts_j = np.asarray(counts_p), np.asarray(counts_j)
+    assert counts_p.sum() == counts_j.sum() == n
+    # identical comb over the same CDF ⇒ identical counts; any slack here
+    # would also break the state comparison below, so assert exactly
+    # (a looser tolerance once masked a bisection off-by-one in the kernel)
+    np.testing.assert_array_equal(counts_p, counts_j)
+    np.testing.assert_allclose(np.asarray(st_p), np.asarray(st_j))
+
+
+def test_pallas_counts_degenerate_weight():
+    lw = jnp.full((512,), -1e4).at[17].set(0.0)
+    _, counts = dist._local_resample_materialize(
+        KEY, jnp.zeros((512, 1)), lw, 512,
+        DRAConfig(resample_backend="pallas"))
+    assert int(counts[17]) == 512
+
+
+def test_pick_block_divides():
+    for n in (8, 96, 768, 1024, 4096, 6144):
+        b = RK.pick_block(n)
+        assert n % b == 0 and b <= RK.DEFAULT_BLOCK
+    assert RK.pick_block(7) == 1 and not RK.kernel_applicable(7)

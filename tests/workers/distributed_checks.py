@@ -4,9 +4,10 @@ Run as a subprocess by tests/test_distributed.py so the pytest process
 keeps its single default device.  Prints one JSON dict.
 """
 import json
-import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.core import runtime
+
+runtime.simulate_host_devices(8)
 
 import jax                      # noqa: E402
 import jax.numpy as jnp        # noqa: E402
@@ -55,6 +56,22 @@ def dra_checks() -> dict:
             out[tag]["overflow_total"] = int(
                 np.asarray(res.diag["overflow"]).sum())
             out[tag]["links_max"] = int(np.asarray(res.diag["links"]).max())
+
+    # Pallas-kernel local resampling selected from DRAConfig (interpret
+    # mode on CPU) — small run, just proves the kernel path works inside
+    # the sharded scan.
+    pf = ParallelParticleFilter(
+        model=model, sir=SIRConfig(n_particles=1024, ess_frac=0.5),
+        dra=DRAConfig(kind="rna", exchange_ratio=0.25,
+                      resample_backend="pallas"),
+        mesh=mesh)
+    res = pf.run(jax.random.key(1), movie.frames[:8])
+    out["rna_pallas"] = {
+        "estimates_finite": bool(np.isfinite(np.asarray(res.estimates)).all()),
+        "log_marginal_finite": bool(np.isfinite(
+            np.asarray(res.log_marginal)).all()),
+        "ess_min": float(res.ess.min()),
+    }
     return out
 
 
@@ -81,10 +98,9 @@ def routing_conservation() -> dict:
     key = jax.random.key(3)
     counts = jax.random.randint(key, (p, c), 0, 40, dtype=jnp.int32)
     states = jax.random.normal(key, (p, c, 5))
-    fn = jax.shard_map(shard_fn, mesh=mesh,
-                       in_specs=(P("data", None), P("data", None, None)),
-                       out_specs=(P("data"), P("data")),
-                       check_vma=False)
+    fn = runtime.shard_map(shard_fn, mesh,
+                           in_specs=(P("data", None), P("data", None, None)),
+                           out_specs=(P("data"), P("data")))
     totals, overflow = fn(counts, states)
     return {
         "total_before": int(counts.sum()),
