@@ -21,10 +21,10 @@ def _time_filter(model, movie, n):
     run = lambda: run_sir(jax.random.key(1), model,
                           SIRConfig(n_particles=n, ess_frac=0.5),
                           movie.frames)
-    (_, _, _), outs = run()                    # compile
+    _, outs = run()                    # compile
     jax.block_until_ready(outs.estimate)
     t0 = time.time()
-    (_, _, _), outs = run()
+    _, outs = run()
     jax.block_until_ready(outs.estimate)
     return time.time() - t0, outs
 

@@ -1,0 +1,133 @@
+"""FilterBank / DRA throughput baseline → BENCH_bank.json.
+
+Two sweeps, recorded so future PRs have a perf trajectory to regress
+against (compare particles/sec, not absolute seconds — CI machines vary):
+
+* ``dra_throughput``: particles/sec for each DRA family at fixed N on a
+  2-device simulated mesh (subprocess worker, same harness as Figs 5–8).
+* ``bank_throughput``: FilterBank particles/sec vs bank size
+  B ∈ {1, 8, 64} on the single-device path — the "many users, one
+  program" serving shape.  Ideal scaling keeps particles/sec flat as B
+  grows (one program amortizes dispatch); the recorded curve is the
+  baseline.
+
+``--smoke`` (or ``benchmarks.run bank --smoke``) shrinks sizes for CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEST = os.path.join(REPO, "BENCH_bank.json")
+
+A, Q, H, R0 = 0.9, 0.5, 1.0, 0.4
+
+
+def _lg_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.smc import StateSpaceModel
+
+    def init_sampler(key, n):
+        return jax.random.normal(key, (n, 1)) * 2.0
+
+    def dynamics_sample(key, state):
+        return A * state + jnp.sqrt(Q) * jax.random.normal(key, state.shape)
+
+    def log_likelihood(state, z):
+        return -0.5 * (z - H * state[:, 0]) ** 2 / R0
+
+    return StateSpaceModel(init_sampler, dynamics_sample, log_likelihood,
+                           state_dim=1)
+
+
+def dra_throughput(smoke: bool) -> list[dict]:
+    from benchmarks.scaling import run_worker
+
+    particles = 2048 if smoke else 8192
+    frames = 6 if smoke else 12
+    rows = []
+    for dra in ("mpf", "rna", "arna", "rpa"):
+        r = run_worker(2, dra, particles=particles, frames=frames,
+                       img=48, repeats=1)
+        rows.append({
+            "dra": dra,
+            "particles": particles,
+            "frames": frames,
+            "seconds": r["seconds"],
+            "particles_per_sec": particles * frames / r["seconds"],
+        })
+    return rows
+
+
+def bank_throughput(smoke: bool) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import FilterBank, SIRConfig
+
+    n = 1024 if smoke else 2048
+    steps = 16 if smoke else 32
+    sizes = (1, 8) if smoke else (1, 8, 64)
+    model = _lg_model()
+    sir = SIRConfig(n_particles=n, ess_frac=0.5)
+    rows = []
+    for b in sizes:
+        keys = jnp.stack([jax.random.key(i) for i in range(b)])
+        obs = jnp.stack([
+            jnp.asarray(np.asarray(jax.random.normal(
+                jax.random.key(1000 + i), (steps,))) * 0.8)
+            for i in range(b)])
+        bank = FilterBank(model=model, sir=sir)
+        res = bank.run(keys, obs)                 # compile + warm
+        jax.block_until_ready(res.estimates)
+        t0 = time.time()
+        res = bank.run(keys, obs)
+        jax.block_until_ready(res.estimates)
+        dt = time.time() - t0
+        rows.append({
+            "bank_size": b,
+            "particles": n,
+            "steps": steps,
+            "seconds": dt,
+            "particles_per_sec": b * n * steps / dt,
+        })
+    return rows
+
+
+def run() -> list[dict]:
+    """benchmarks.run entry point — also writes BENCH_bank.json.
+
+    Smoke runs never touch the committed full-size baseline: they write a
+    sibling (gitignored) BENCH_bank.smoke.json instead.
+    """
+    smoke = "--smoke" in sys.argv
+    dra = dra_throughput(smoke)
+    bank = bank_throughput(smoke)
+    dest = DEST.replace(".json", ".smoke.json") if smoke else DEST
+    with open(dest, "w") as f:
+        json.dump({"smoke": smoke, "dra_throughput": dra,
+                   "bank_throughput": bank}, f, indent=1)
+    rows = []
+    for r in dra:
+        rows.append({
+            "name": f"bank/dra_{r['dra']}_n{r['particles']}",
+            "us_per_call": r["seconds"] * 1e6,
+            "derived": f"{r['particles_per_sec']:.0f} particles/s",
+        })
+    for r in bank:
+        rows.append({
+            "name": f"bank/filterbank_B{r['bank_size']}_n{r['particles']}",
+            "us_per_call": r["seconds"] * 1e6,
+            "derived": f"{r['particles_per_sec']:.0f} particles/s",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    print(f"wrote {DEST}", file=sys.stderr)

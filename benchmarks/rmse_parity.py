@@ -26,9 +26,9 @@ def run() -> list[dict]:
         t0 = time.time()
         reps = []
         for rep in range(3):
-            (_, _, _), outs = run_sir(jax.random.key(rep + 1), model,
-                                      SIRConfig(n_particles=n, ess_frac=0.5),
-                                      movie.frames)
+            _, outs = run_sir(jax.random.key(rep + 1), model,
+                              SIRConfig(n_particles=n, ess_frac=0.5),
+                              movie.frames)
             jax.block_until_ready(outs.estimate)
             reps.append(float(tracking_rmse(outs.estimate,
                                             movie.trajectories[:, 0],

@@ -20,6 +20,8 @@ SUITES = {
     "asir": ("benchmarks.asir_speedup", "§VI.F ASIR speedup"),
     "kernels": ("benchmarks.kernel_bench", "§V.E kernel microbench"),
     "roofline": ("benchmarks.roofline_table", "dry-run roofline table"),
+    "bank": ("benchmarks.bank_bench",
+             "FilterBank/DRA throughput baseline (BENCH_bank.json)"),
 }
 
 

@@ -1,13 +1,21 @@
 """PPF core: particle ensembles, resampling, DLB scheduling, compression,
 distributed resampling algorithms, and SIR/ASIR drivers."""
-from repro.core.particles import (ParticleEnsemble, effective_sample_size,
-                                  normalized_weights, weighted_mean)
-from repro.core.smc import SIRConfig, StateSpaceModel, make_sir_step, run_sir
+from repro.core.particles import (ParticleEnsemble, advance,
+                                  effective_sample_size, init_ensemble,
+                                  log_sum_weights, logical_size, materialize,
+                                  normalized_weights, resample,
+                                  resample_compressed, reweight,
+                                  weighted_mean)
+from repro.core.smc import (SIRCarry, SIRConfig, StateSpaceModel,
+                            ess_resample, make_sir_step, run_sir)
 from repro.core.distributed import DRAConfig
-from repro.core.filters import FilterResult, ParallelParticleFilter
+from repro.core.filters import FilterBank, FilterResult, ParallelParticleFilter
 
 __all__ = [
-    "ParticleEnsemble", "effective_sample_size", "normalized_weights",
-    "weighted_mean", "SIRConfig", "StateSpaceModel", "make_sir_step",
-    "run_sir", "DRAConfig", "FilterResult", "ParallelParticleFilter",
+    "ParticleEnsemble", "advance", "effective_sample_size", "init_ensemble",
+    "log_sum_weights", "logical_size", "materialize", "normalized_weights",
+    "resample", "resample_compressed", "reweight", "weighted_mean",
+    "SIRCarry", "SIRConfig", "StateSpaceModel", "ess_resample",
+    "make_sir_step", "run_sir", "DRAConfig", "FilterBank", "FilterResult",
+    "ParallelParticleFilter",
 ]

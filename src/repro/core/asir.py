@@ -52,8 +52,13 @@ def make_asir_model(base: StateSpaceModel, cfg: TrackingConfig,
         ], axis=-1)
         return flat                                   # (G·G·B, 5)
 
+    # the lattice is observation-independent: build it once at wrap time so
+    # every step (and every FilterBank member — the closure is vmap- and
+    # shard_map-compatible like any StateSpaceModel) reuses one constant
+    grid = grid_states()
+
     def log_likelihood(state: Array, frame: Array) -> Array:
-        table = patch_log_likelihood(grid_states(), frame, cfg)
+        table = patch_log_likelihood(grid, frame, cfg)
         table = table.reshape(g, g, asir.intensity_bins)
         iy = jnp.clip((state[:, 0] / cell_y).astype(jnp.int32), 0, g - 1)
         ix = jnp.clip((state[:, 1] / cell_x).astype(jnp.int32), 0, g - 1)

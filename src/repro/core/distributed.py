@@ -16,23 +16,28 @@ Four DRA families, exactly the paper's taxonomy:
   shards, followed by DLB routing (GS/SGS/LGS from ``repro.core.dlb``) of
   compressed particles.
 
-All functions here are *per-shard* programs: they use collectives with an
-``axis_name`` (always through the ``repro.core.runtime`` facade) and are
-meant to be called inside ``shard_map`` (see ``repro.core.filters`` for
-the user-facing driver).
+All functions here are *per-shard* ensemble transformers: they take the
+shard's ``ParticleEnsemble`` and return the resampled one (DESIGN.md §9),
+use collectives with an ``axis_name`` (always through the
+``repro.core.runtime`` facade), and are meant to be called inside
+``shard_map`` (see ``repro.core.filters`` for the user-facing driver).
+RPA stays in the compressed (counts) representation end-to-end: local
+resample → DLB routing → merge all move multiplicities and per-replica
+log-weights, and replicas are only materialized afterwards (paper §V.B).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import dlb
+from repro.core import particles
 from repro.core import resampling
 from repro.core import runtime
-from repro.core.particles import log_sum_weights
+from repro.core.particles import ParticleEnsemble, log_sum_weights
 from repro.kernels import resample as resample_kernel
 
 Array = jax.Array
@@ -157,20 +162,41 @@ def _local_resample_materialize(key: Array, state: Any, log_weights: Array,
     return new_state, counts
 
 
+def _local_resample_ensemble(key: Array, ensemble: ParticleEnsemble,
+                             log_weight: Array,
+                             cfg: DRAConfig) -> ParticleEnsemble:
+    """Full-capacity local resample to a materialized ensemble whose every
+    slot carries ``log_weight`` (the MPF/RNA/ARNA post-resample weight).
+
+    Counts are folded into the sampling weights (§9 rule 3), so compressed
+    and materialized input ensembles draw the same offspring distribution.
+    """
+    c = ensemble.capacity
+    eff_lw = particles.effective_log_weights(ensemble.log_weights,
+                                             ensemble.counts)
+    state, _ = _local_resample_materialize(key, ensemble.state, eff_lw, c,
+                                           cfg)
+    return ParticleEnsemble(state=state,
+                            log_weights=jnp.full((c,), log_weight),
+                            counts=jnp.ones((c,), jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # The four DRA resample+rebalance programs
 # ---------------------------------------------------------------------------
 
-def mpf_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
-                 axis_name: str) -> tuple[Any, Array, dict]:
+def mpf_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
+                 axis_name: str) -> tuple[ParticleEnsemble, dict]:
     """Independent local resampling; shard keeps its aggregate weight."""
-    c = log_weights.shape[0]
-    local_lz, gathered = _shard_log_z(log_weights, axis_name)
+    c = ensemble.capacity
+    local_lz, gathered = _shard_log_z(
+        particles.effective_log_weights(ensemble.log_weights,
+                                        ensemble.counts), axis_name)
     glz = jax.scipy.special.logsumexp(gathered)
-    state, _ = _local_resample_materialize(key, state, log_weights, c, cfg)
     # each offspring carries Ŵ_i / C of the global posterior mass
-    lw = jnp.full((c,), local_lz - glz - jnp.log(c))
-    return state, lw, {"exchanged": jnp.zeros((), jnp.int32)}
+    out = _local_resample_ensemble(key, ensemble,
+                                   local_lz - glz - jnp.log(c), cfg)
+    return out, {"exchanged": jnp.zeros((), jnp.int32)}
 
 
 def _ring_exchange(state: Any, log_weights: Array, m_buf: int, m_valid: Array,
@@ -227,40 +253,53 @@ def _ring_exchange(state: Any, log_weights: Array, m_buf: int, m_valid: Array,
     return out_state, out_lw
 
 
-def rna_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
-                 axis_name: str) -> tuple[Any, Array, dict]:
+def _permute_ensemble(key: Array, ensemble: ParticleEnsemble) -> ParticleEnsemble:
+    """Randomize slot order (systematic ancestors are sorted, so the ring
+    head would otherwise always ship the lowest-index ancestors)."""
+    order = jax.random.permutation(key, ensemble.capacity)
+    state = jax.tree_util.tree_map(lambda x: x[order], ensemble.state)
+    return ensemble.replace(state=state,
+                            log_weights=ensemble.log_weights[order],
+                            counts=ensemble.counts[order])
+
+
+def rna_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
+                 axis_name: str) -> tuple[ParticleEnsemble, dict]:
     """RNA: local resample to C, then static ring exchange of a fixed
     fraction (paper §III / §VII.D)."""
-    c = log_weights.shape[0]
-    local_lz, gathered = _shard_log_z(log_weights, axis_name)
+    c = ensemble.capacity
+    local_lz, gathered = _shard_log_z(
+        particles.effective_log_weights(ensemble.log_weights,
+                                        ensemble.counts), axis_name)
     glz = jax.scipy.special.logsumexp(gathered)
     k_res, k_perm = jax.random.split(key)
-    state, _ = _local_resample_materialize(k_res, state, log_weights, c, cfg)
-    lw = jnp.full((c,), local_lz - glz - jnp.log(c))
+    ens = _local_resample_ensemble(k_res, ensemble,
+                                   local_lz - glz - jnp.log(c), cfg)
     # randomize which particles travel (systematic ancestors are ordered)
-    order = jax.random.permutation(k_perm, c)
-    state = jax.tree_util.tree_map(lambda x: x[order], state)
-    lw = lw[order]
+    ens = _permute_ensemble(k_perm, ens)
     m = max(int(round(cfg.exchange_ratio * c)), 1)
-    state, lw = _ring_exchange(state, lw, m, jnp.asarray(m), axis_name)
-    return state, lw, {"exchanged": jnp.asarray(m, jnp.int32)}
+    state, lw = _ring_exchange(ens.state, ens.log_weights, m,
+                               jnp.asarray(m), axis_name)
+    ens = ens.replace(state=state, log_weights=lw)
+    return ens, {"exchanged": jnp.asarray(m, jnp.int32)}
 
 
-def arna_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
-                  axis_name: str, max_log_lik: Array) -> tuple[Any, Array, dict]:
+def arna_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
+                  axis_name: str,
+                  max_log_lik: Array) -> tuple[ParticleEnsemble, dict]:
     """ARNA: RNA with P_eff-adaptive exchange ratio and lost-mode shuffle."""
-    c = log_weights.shape[0]
+    c = ensemble.capacity
     p = _axis_size(axis_name)
-    p_eff = effective_processes(log_weights, axis_name)
-    local_lz, gathered = _shard_log_z(log_weights, axis_name)
+    eff_lw = particles.effective_log_weights(ensemble.log_weights,
+                                             ensemble.counts)
+    p_eff = effective_processes(eff_lw, axis_name)
+    local_lz, gathered = _shard_log_z(eff_lw, axis_name)
     glz = jax.scipy.special.logsumexp(gathered)
 
     k_res, k_perm = jax.random.split(key)
-    state, _ = _local_resample_materialize(k_res, state, log_weights, c, cfg)
-    lw = jnp.full((c,), local_lz - glz - jnp.log(c))
-    order = jax.random.permutation(k_perm, c)
-    state = jax.tree_util.tree_map(lambda x: x[order], state)
-    lw = lw[order]
+    ens = _local_resample_ensemble(k_res, ensemble,
+                                   local_lz - glz - jnp.log(c), cfg)
+    ens = _permute_ensemble(k_perm, ens)
 
     # adaptive ratio: all shards tracking (P_eff≈P) → q_min; collapsed → q_max
     frac_eff = jnp.clip(p_eff / p, 0.0, 1.0)
@@ -270,9 +309,10 @@ def arna_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
     m_valid = jnp.minimum(m_valid, m_buf)
 
     lost = runtime.pmax(max_log_lik, axis_name) < cfg.lost_log_lik
-    state, lw = _ring_exchange(state, lw, m_buf, m_valid, axis_name,
-                               shuffle=lost)
-    return state, lw, {
+    state, lw = _ring_exchange(ens.state, ens.log_weights, m_buf, m_valid,
+                               axis_name, shuffle=lost)
+    ens = ens.replace(state=state, log_weights=lw)
+    return ens, {
         "exchanged": m_valid,
         "p_eff": p_eff,
         "q": q,
@@ -280,38 +320,47 @@ def arna_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
     }
 
 
-def rpa_resample(key: Array, state: Any, log_weights: Array, cfg: DRAConfig,
-                 axis_name: str) -> tuple[Any, Array, dict]:
+def rpa_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
+                 axis_name: str) -> tuple[ParticleEnsemble, dict]:
     """RPA: proportional allocation across shards + DLB routing of
-    compressed particles (paper §III–§V)."""
-    c = log_weights.shape[0]
+    compressed particles (paper §III–§V).
+
+    The compressed representation is carried end-to-end: the local
+    resample produces (counts, per-replica log-weights), routing ships
+    exactly those, and replicas are materialized only after the merge —
+    no placeholder weight vectors anywhere (DESIGN.md §9).
+    """
+    c = ensemble.capacity
     p = _axis_size(axis_name)
     my = runtime.axis_index(axis_name)
     n_total = c * p
     cap_units = int(round(cfg.slack * c))
 
     # --- stratified proportional allocation over shards (identical everywhere)
-    _, gathered_lz = _shard_log_z(log_weights, axis_name)
+    _, gathered_lz = _shard_log_z(
+        particles.effective_log_weights(ensemble.log_weights,
+                                        ensemble.counts), axis_name)
     alloc = dlb.proportional_allocation(gathered_lz, n_total, cap_units)  # (P,)
 
-    # --- local resampling of my allocation, in compressed (counts) form
-    counts_fn = resampling.RESAMPLERS[cfg.resampler]
-    counts = counts_fn(key, log_weights, alloc[my], capacity=cap_units)  # (C,)
+    # --- local resampling of my allocation, in compressed (counts) form;
+    # post-resample every offspring unit carries 1/N of the posterior
+    comp = particles.resample_compressed(
+        key, ensemble, alloc[my], scheme=cfg.resampler, capacity=cap_units,
+        fill_log_weight=-jnp.log(float(n_total)))
 
     # --- DLB schedule from the globally known allocation vector
     targets = dlb.balanced_targets(jnp.asarray(n_total), p)
     schedule = dlb.SCHEDULERS[cfg.scheduler](alloc, targets)  # (P, P)
     row_send = schedule[my]
 
-    # --- route compressed particles, then expand locally (deferred creation)
-    route = dlb.route_compressed(state, counts, jnp.zeros((c,)), row_send,
-                                 k_cap=cfg.k_cap, axis_name=axis_name)
-    out_state, _, valid = dlb.merge_routed(state, jnp.zeros((c,)),
-                                           route.kept_counts, route, c)
-    # post-resample weights: every survivor represents 1/N of the posterior
-    lw = jnp.where(valid, -jnp.log(n_total), -jnp.inf)
+    # --- route compressed particles, merge, then expand locally
+    # (deferred replica creation, paper §V.B)
+    route = dlb.route_compressed(comp, row_send, k_cap=cfg.k_cap,
+                                 axis_name=axis_name)
+    merged = dlb.merge_routed(comp, route)
+    out = particles.materialize(merged, c)
     stats = dlb.schedule_stats(schedule)
-    return out_state, lw, {
+    return out, {
         "overflow": runtime.psum(route.overflow_units, axis_name),
         "links": stats["links"],
         "units_moved": stats["units_moved"],

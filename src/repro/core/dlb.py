@@ -29,12 +29,13 @@ balancing is acceptable).
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import runtime
+from repro.core.particles import ParticleEnsemble
 
 Array = jax.Array
 
@@ -162,18 +163,23 @@ def _window_overlap(u_lo: Array, u_hi: Array, a: Array, b: Array) -> Array:
     return jnp.maximum(jnp.minimum(u_hi, b) - jnp.maximum(u_lo, a), 0)
 
 
-def route_compressed(state: Any, counts: Array, log_weights: Array,
-                     row_send: Array, *, k_cap: int, axis_name: str) -> RouteResult:
+def route_compressed(ensemble: ParticleEnsemble, row_send: Array, *,
+                     k_cap: int, axis_name: str) -> RouteResult:
     """Execute one shard's row of the schedule inside ``shard_map``.
 
-    state:       pytree of (C, ...) unique-particle states
-    counts:      (C,) int32 multiplicities (compressed ensemble)
-    log_weights: (C,) per-replica log-weights
-    row_send:    (P,) int32 units this shard sends to each peer
+    ensemble: the shard's *compressed* ensemble (DESIGN.md §9) — pytree of
+              (C, ...) unique-particle states, (C,) per-replica
+              log-weights, (C,) int32 multiplicities
+    row_send: (P,) int32 units this shard sends to each peer
+
+    The real per-replica log-weights travel with the particles — receivers
+    see exactly the weight each shipped unit carried on its sender.
     """
-    c = counts.shape[0]
+    state = ensemble.state
+    log_weights = ensemble.log_weights
+    c = ensemble.counts.shape[0]
     p = row_send.shape[0]
-    counts = counts.astype(jnp.int32)
+    counts = ensemble.counts.astype(jnp.int32)
     # Unit line over local particles: particle k owns [u_lo_k, u_hi_k).
     u_hi = jnp.cumsum(counts)
     u_lo = u_hi - counts
@@ -212,32 +218,27 @@ def route_compressed(state: Any, counts: Array, log_weights: Array,
                        overflow_units=overflow)
 
 
-def merge_routed(state: Any, log_weights: Array, kept_counts: Array,
-                 route: RouteResult, capacity: int) -> tuple[Any, Array, Array]:
-    """Concatenate kept + received compressed particles and expand to a
-    materialized ensemble of exactly ``capacity`` slots.
+def merge_routed(ensemble: ParticleEnsemble,
+                 route: RouteResult) -> ParticleEnsemble:
+    """Concatenate kept + received compressed particles — still compressed.
 
-    Returns (state, log_weights, valid_mask).  Slots beyond the logical
-    size are masked (count-0 padding).  Expansion is the deferred replica
-    creation of paper §V.B — it happens *after* routing, locally.
+    ``ensemble`` is the pre-routing compressed ensemble whose shipped
+    units ``route.kept_counts`` accounts for.  The result has capacity
+    ``C + P·K`` and stays in the counts representation: expansion to
+    replicas is a separate, purely local step
+    (``repro.core.particles.materialize`` — the deferred replica creation
+    of paper §V.B).
     """
     flat_recv_counts = route.recv_counts.reshape(-1)
     flat_recv_lw = route.recv_log_weights.reshape(-1)
-    all_counts = jnp.concatenate([kept_counts, flat_recv_counts])
+    all_counts = jnp.concatenate([route.kept_counts.astype(jnp.int32),
+                                  flat_recv_counts])
 
     def cat(x_local, x_recv):
         return jnp.concatenate(
             [x_local, x_recv.reshape((-1,) + x_recv.shape[2:])], axis=0)
 
-    all_state = jax.tree_util.tree_map(cat, state, route.recv_state)
-    all_lw = jnp.concatenate([log_weights, flat_recv_lw])
-
-    total = jnp.sum(all_counts)
-    ancestors = jnp.repeat(
-        jnp.arange(all_counts.shape[0], dtype=jnp.int32), all_counts,
-        total_repeat_length=capacity)
-    out_state = jax.tree_util.tree_map(lambda x: x[ancestors], all_state)
-    out_lw = all_lw[ancestors]
-    valid = jnp.arange(capacity) < total
-    out_lw = jnp.where(valid, out_lw, -jnp.inf)
-    return out_state, out_lw, valid
+    all_state = jax.tree_util.tree_map(cat, ensemble.state, route.recv_state)
+    all_lw = jnp.concatenate([ensemble.log_weights, flat_recv_lw])
+    return ParticleEnsemble(state=all_state, log_weights=all_lw,
+                            counts=all_counts)

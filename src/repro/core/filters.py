@@ -1,10 +1,14 @@
-"""User-facing parallel particle filter driver (the PPF "actors" layer).
+"""User-facing parallel particle filter drivers (the PPF "actors" layer).
 
 ``ParallelParticleFilter`` hides mesh setup, ``shard_map`` plumbing, PRNG
 sharding, and the scan over frames — the paper's stated goal of "hiding the
 difficulties of efficient parallel programming of PF algorithms" (§I).
-All SPMD entry points come from ``repro.core.runtime`` so the driver runs
-unchanged across JAX versions.
+``FilterBank`` runs B *independent* filter instances (one model, distinct
+targets/observation streams/RNG) as a single jitted program — the
+"many users, one program" serving shape: ``vmap`` over the bank dimension
+composed with ``shard_map`` over the device mesh, so B × C particles tile
+the device grid.  All SPMD entry points come from ``repro.core.runtime``
+so the drivers run unchanged across JAX versions.
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import distributed as dist
+from repro.core import particles
 from repro.core import runtime
 from repro.core import smc
 
@@ -23,12 +28,12 @@ Array = jax.Array
 
 
 class FilterResult(NamedTuple):
-    estimates: Any       # (K, ...) MMSE per frame
+    estimates: Any       # (K, ...) MMSE per frame ((B, K, ...) for a bank)
     ess: Array           # (K,)
     log_marginal: Array  # (K,) per-frame increments
     resampled: Array     # (K,)
     diag: dict           # stacked DRA diagnostics
-    final_state: Any     # particle states at the last frame
+    final: particles.ParticleEnsemble  # ensemble at the last frame
 
 
 @dataclasses.dataclass
@@ -52,29 +57,24 @@ class ParallelParticleFilter:
 
     # -- single-device reference ------------------------------------------
     def _run_local(self, key: Array, observations: Any) -> FilterResult:
-        (_, state, _), outs = smc.run_sir(key, self.model, self.sir, observations)
+        carry, outs = smc.run_sir(key, self.model, self.sir, observations)
         return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
-                            outs.resampled, outs.diag, state)
+                            outs.resampled, outs.diag, carry.ensemble)
 
     # -- distributed -------------------------------------------------------
     def _run_sharded(self, key: Array, observations: Any) -> FilterResult:
         mesh = self.mesh
         p = mesh.shape[self.axis_name]
         n = self.sir.n_particles
-        if n % p:
-            raise ValueError(f"n_particles={n} not divisible by {p} shards")
-        c = n // p
+        c = _shard_capacity(n, p)
         step = smc.make_distributed_sir_step(self.model, self.sir, self.dra,
                                              self.axis_name)
 
         def shard_fn(key, obs):
-            # per-shard RNG stream
-            idx = runtime.axis_index(self.axis_name)
-            k_init, k_run = jax.random.split(jax.random.fold_in(key, idx))
-            state = self.model.init_sampler(k_init, c)
-            lw = jnp.full((c,), -jnp.log(float(n)))
-            carry, outs = jax.lax.scan(step, (k_run, state, lw), obs)
-            return outs, carry[1]
+            carry, outs = jax.lax.scan(
+                step, _shard_carry(key, self.model, self.axis_name, c, n),
+                obs)
+            return outs, carry.ensemble
 
         spec_particles = P(self.axis_name)
         fn = runtime.shard_map(
@@ -87,6 +87,114 @@ class ParallelParticleFilter:
                 spec_particles,
             ),
         )
-        outs, final_state = jax.jit(fn)(key, observations)
+        outs, final = jax.jit(fn)(key, observations)
         return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
-                            outs.resampled, outs.diag, final_state)
+                            outs.resampled, outs.diag, final)
+
+
+@dataclasses.dataclass
+class FilterBank:
+    """B independent SIR filters (shared model/config) in ONE program.
+
+    Each bank member tracks its own target: member ``i`` consumes
+    ``observations[i]`` with PRNG stream ``keys[i]`` and reproduces
+    ``ParallelParticleFilter.run(keys[i], observations[i])`` exactly —
+    the bank is a ``vmap`` over the member axis, not an approximation.
+
+    Sharding shape (the "many users, one program" serving layout):
+
+    * ``mesh=None`` — every member runs on one device, batched by ``vmap``;
+      one compiled program regardless of B.
+    * ``mesh`` with ``axis_name`` — every member's N particles are sharded
+      over the ``axis_name`` mesh axis (the configured DRA runs per
+      member); the bank axis is replicated.
+    * ``bank_axis`` set — the member dimension is additionally sharded
+      over the ``bank_axis`` mesh axis, so B × C particles tile the 2-D
+      device grid: B/P_b members per bank shard × N/P_c particles per
+      particle shard.
+    """
+
+    model: smc.StateSpaceModel
+    sir: smc.SIRConfig                       # per-member particle count
+    dra: dist.DRAConfig = dataclasses.field(default_factory=dist.DRAConfig)
+    mesh: Mesh | None = None
+    axis_name: str = "data"                  # particle-sharding mesh axis
+    bank_axis: str | None = None             # optional bank-sharding mesh axis
+
+    def run(self, keys: Array, observations: Any) -> FilterResult:
+        """keys: (B,) PRNG keys, one per member.  observations: pytree of
+        per-member streams with leading dims (B, K_frames, ...).  Returns a
+        ``FilterResult`` whose every field carries a leading bank dim."""
+        if self.mesh is None or self.mesh.devices.size == 1:
+            return self._run_local(keys, observations)
+        return self._run_sharded(keys, observations)
+
+    def _run_local(self, keys: Array, observations: Any) -> FilterResult:
+        def member(key, obs):
+            carry, outs = smc.run_sir(key, self.model, self.sir, obs)
+            return outs, carry.ensemble
+
+        outs, final = jax.jit(jax.vmap(member))(keys, observations)
+        return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
+                            outs.resampled, outs.diag, final)
+
+    def _run_sharded(self, keys: Array, observations: Any) -> FilterResult:
+        mesh = self.mesh
+        if self.bank_axis is not None and self.bank_axis not in mesh.shape:
+            raise ValueError(f"bank_axis={self.bank_axis!r} not in mesh "
+                             f"axes {tuple(mesh.shape)}")
+        p = mesh.shape[self.axis_name]
+        n = self.sir.n_particles
+        c = _shard_capacity(n, p)
+        b = jnp.shape(keys)[0]
+        p_bank = mesh.shape[self.bank_axis] if self.bank_axis else 1
+        if b % p_bank:
+            raise ValueError(f"bank size {b} not divisible by "
+                             f"{p_bank} bank shards")
+        step = smc.make_distributed_sir_step(self.model, self.sir, self.dra,
+                                             self.axis_name)
+
+        def member(key, obs):
+            carry, outs = jax.lax.scan(
+                step, _shard_carry(key, self.model, self.axis_name, c, n),
+                obs)
+            return outs, carry.ensemble
+
+        def shard_fn(keys, obs):
+            # vmap over this shard's bank members; collectives inside the
+            # step batch over the member axis (one launch per collective,
+            # not one per member)
+            return jax.vmap(member)(keys, obs)
+
+        bank = P(self.bank_axis) if self.bank_axis else P()
+        spec_particles = P(self.bank_axis, self.axis_name)
+        fn = runtime.shard_map(
+            shard_fn,
+            mesh,
+            in_specs=(bank, bank),
+            out_specs=(
+                smc.StepOutput(estimate=bank, ess=bank, log_marginal=bank,
+                               resampled=bank, diag=bank),
+                spec_particles,
+            ),
+        )
+        outs, final = jax.jit(fn)(keys, observations)
+        return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
+                            outs.resampled, outs.diag, final)
+
+
+def _shard_capacity(n: int, p: int) -> int:
+    if n % p:
+        raise ValueError(f"n_particles={n} not divisible by {p} shards")
+    return n // p
+
+
+def _shard_carry(key: Array, model: smc.StateSpaceModel, axis_name: str,
+                 c: int, n: int) -> smc.SIRCarry:
+    """Per-shard initial carry: fold the shard index into the PRNG stream
+    and draw this shard's C-slot piece of the N-particle ensemble."""
+    idx = runtime.axis_index(axis_name)
+    k_init, k_run = jax.random.split(jax.random.fold_in(key, idx))
+    ens = particles.init_ensemble(k_init, model.init_sampler, c,
+                                  log_weight=-jnp.log(float(n)))
+    return smc.SIRCarry(k_run, ens)

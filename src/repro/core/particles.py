@@ -2,6 +2,12 @@
 
 The fundamental data structure of the PPF library (paper §VI, *particle*
 module): a fixed-capacity, SPMD-friendly ensemble of weighted particles.
+``ParticleEnsemble`` is the single representation that flows through the
+whole filter stack — the SIR step builders (``repro.core.smc``), the four
+distributed resampling algorithms (``repro.core.distributed``), DLB routing
+(``repro.core.dlb``), and the user-facing drivers (``repro.core.filters``)
+all take and return ensembles.  The contract (capacity vs logical size,
+``-inf`` empty slots, counts semantics) is DESIGN.md §9.
 
 All weights are carried in log-space for numerical robustness; the paper's
 Java implementation uses linear weights, which underflow for large N — this
@@ -10,7 +16,7 @@ is one of the deliberate "hardware adaptation" changes recorded in DESIGN.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +27,7 @@ Array = jax.Array
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ParticleEnsemble:
-    """A weighted particle ensemble with static capacity.
+    """A weighted particle ensemble with static capacity (DESIGN.md §9).
 
     Attributes:
       state: pytree of arrays, each with leading dim ``N`` (capacity).
@@ -29,8 +35,8 @@ class ParticleEnsemble:
         "empty" (RPA under-allocation) carry ``-inf``.
       counts: ``(N,)`` int32 multiplicities — the *compressed particles*
         representation of paper §V.  A materialized (uncompressed) ensemble
-        has ``counts == 1`` everywhere.  ``sum(counts * (log_weights > -inf))``
-        is the logical particle count.
+        has ``counts == 1`` on every live slot.  ``sum(counts *
+        (log_weights > -inf))`` is the logical particle count.
     """
 
     state: Any
@@ -45,21 +51,41 @@ class ParticleEnsemble:
         return dataclasses.replace(self, **kw)
 
 
-def init_ensemble(key: Array, sampler, n: int, state_dim: int | None = None) -> ParticleEnsemble:
-    """Draw ``n`` particles from ``sampler(key, n)`` with uniform weights."""
+def init_ensemble(key: Array, sampler, n: int, *,
+                  log_weight: Array | float | None = None) -> ParticleEnsemble:
+    """Draw ``n`` particles from ``sampler(key, n)``, uniformly weighted.
+
+    ``log_weight`` is the per-slot log-weight; the default ``-log(n)``
+    gives a normalized ensemble.  Distributed callers that hold one shard
+    of a larger ensemble pass ``-log(n_global)`` instead.
+    """
     state = sampler(key, n)
+    if log_weight is None:
+        log_weight = -jnp.log(float(n))
     return ParticleEnsemble(
         state=state,
-        log_weights=jnp.zeros((n,), jnp.float32),
+        log_weights=jnp.full((n,), log_weight, jnp.float32),
         counts=jnp.ones((n,), jnp.int32),
     )
 
 
+# ---------------------------------------------------------------------------
+# Weight algebra (counts-aware: identical on compressed and materialized
+# ensembles by construction — tests/test_particles.py holds this invariant)
+# ---------------------------------------------------------------------------
+
+def effective_log_weights(log_weights: Array, counts: Array | None) -> Array:
+    """Per-slot log-weight with multiplicity folded in (count-0 → -inf)."""
+    if counts is None:
+        return log_weights
+    return log_weights + jnp.where(
+        counts > 0, jnp.log(jnp.maximum(counts, 1).astype(log_weights.dtype)),
+        -jnp.inf)
+
+
 def normalized_weights(log_weights: Array, counts: Array | None = None) -> Array:
     """Linear, normalized weights.  Multiplicities scale the weights."""
-    lw = log_weights
-    if counts is not None:
-        lw = lw + jnp.log(jnp.maximum(counts, 1).astype(lw.dtype)) + jnp.where(counts > 0, 0.0, -jnp.inf)
+    lw = effective_log_weights(log_weights, counts)
     m = jnp.max(lw)
     # Guard the all -inf corner (empty ensemble): produce uniform weights.
     m = jnp.where(jnp.isfinite(m), m, 0.0)
@@ -75,10 +101,8 @@ def log_sum_weights(log_weights: Array, counts: Array | None = None) -> Array:
     resampling algorithms (paper §III) to form the global posterior
     normalization.
     """
-    lw = log_weights
-    if counts is not None:
-        lw = lw + jnp.where(counts > 0, jnp.log(jnp.maximum(counts, 1).astype(lw.dtype)), -jnp.inf)
-    return jax.scipy.special.logsumexp(lw)
+    return jax.scipy.special.logsumexp(
+        effective_log_weights(log_weights, counts))
 
 
 def effective_sample_size(log_weights: Array, counts: Array | None = None) -> Array:
@@ -108,3 +132,93 @@ def logical_size(ensemble: ParticleEnsemble) -> Array:
     """Number of logical (multiplicity-expanded) particles."""
     valid = jnp.isfinite(ensemble.log_weights)
     return jnp.sum(jnp.where(valid, ensemble.counts, 0))
+
+
+# ---------------------------------------------------------------------------
+# Ensemble ops — the SIR verbs (advance / reweight / resample / materialize)
+# ---------------------------------------------------------------------------
+
+def advance(ensemble: ParticleEnsemble, key: Array,
+            dynamics_sample: Callable[[Array, Any], Any]) -> ParticleEnsemble:
+    """Propagate every particle through the dynamics (proposal) kernel."""
+    return ensemble.replace(state=dynamics_sample(key, ensemble.state))
+
+
+def reweight(ensemble: ParticleEnsemble, log_lik: Array) -> ParticleEnsemble:
+    """Multiply the likelihood into the weights (Alg. 1 line 9).
+
+    Empty slots (``-inf``) stay empty regardless of the likelihood value —
+    a dead slot cannot be revived by a finite likelihood.
+    """
+    lw = ensemble.log_weights
+    return ensemble.replace(
+        log_weights=jnp.where(jnp.isfinite(lw), lw + log_lik, -jnp.inf))
+
+
+def resample_compressed(key: Array, ensemble: ParticleEnsemble,
+                        n_out: Array | int, *, scheme: str = "systematic",
+                        capacity: int | None = None,
+                        fill_log_weight: Array | float | None = None
+                        ) -> ParticleEnsemble:
+    """Resample ``n_out`` offspring in compressed (counts) form (paper §V).
+
+    State arrays are untouched; only the multiplicities change.  The
+    returned per-replica log-weights are ``fill_log_weight`` (default
+    ``-log(n_out)``: a locally normalized uniform posterior) on slots with
+    offspring, ``-inf`` elsewhere.  ``n_out`` may be traced (DESIGN.md
+    §2.1); ``capacity`` sizes the comb and defaults to the ensemble's.
+    """
+    from repro.core import resampling  # function-level: resampling imports us
+
+    cap = capacity if capacity is not None else ensemble.capacity
+    eff_lw = effective_log_weights(ensemble.log_weights, ensemble.counts)
+    counts = resampling.RESAMPLERS[scheme](key, eff_lw, n_out, capacity=cap)
+    if fill_log_weight is None:
+        fill_log_weight = -jnp.log(jnp.maximum(
+            jnp.asarray(n_out, jnp.float32), 1.0))
+    lw = jnp.where(counts > 0, jnp.asarray(fill_log_weight, jnp.float32),
+                   -jnp.inf)
+    return ensemble.replace(log_weights=lw, counts=counts)
+
+
+def resample(key: Array, ensemble: ParticleEnsemble, *,
+             scheme: str = "systematic",
+             fill_log_weight: Array | float | None = None) -> ParticleEnsemble:
+    """Full-capacity local resample, materialized (Alg. 1 lines 16–18).
+
+    Equivalent to ``materialize(resample_compressed(...))`` with
+    ``n_out == capacity`` but gathers ancestors directly.
+    """
+    from repro.core import resampling
+
+    n = ensemble.capacity
+    comp = resample_compressed(key, ensemble, n, scheme=scheme,
+                               fill_log_weight=fill_log_weight)
+    ancestors = resampling.counts_to_ancestors(comp.counts, n)
+    state = jax.tree_util.tree_map(lambda x: x[ancestors], ensemble.state)
+    return ParticleEnsemble(state=state,
+                            log_weights=comp.log_weights[ancestors],
+                            counts=jnp.ones((n,), jnp.int32))
+
+
+def materialize(ensemble: ParticleEnsemble,
+                capacity: int | None = None) -> ParticleEnsemble:
+    """Expand multiplicities into replicas — the deferred replica creation
+    of paper §V.B, done locally *after* routing.
+
+    Slots beyond the logical size are empty (``-inf`` log-weight, count 0).
+    If the logical size exceeds ``capacity`` the tail is truncated (can
+    only happen when routing overflow left a shard over-allocated; the
+    residual imbalance is re-balanced on the next step, DESIGN.md §4).
+    """
+    cap = capacity if capacity is not None else ensemble.capacity
+    counts = jnp.where(jnp.isfinite(ensemble.log_weights),
+                       ensemble.counts, 0).astype(jnp.int32)
+    total = jnp.sum(counts)
+    ancestors = jnp.repeat(jnp.arange(counts.shape[0], dtype=jnp.int32),
+                           counts, total_repeat_length=cap)
+    state = jax.tree_util.tree_map(lambda x: x[ancestors], ensemble.state)
+    valid = jnp.arange(cap) < total
+    lw = jnp.where(valid, ensemble.log_weights[ancestors], -jnp.inf)
+    return ParticleEnsemble(state=state, log_weights=lw,
+                            counts=valid.astype(jnp.int32))

@@ -2,9 +2,16 @@
 per-shard SPMD step builders.
 
 The step builders return functions suitable for ``jax.lax.scan`` over a
-sequence of observations (frames).  The distributed builder is a *per-shard*
-program (collectives by ``axis_name``) to be wrapped in ``shard_map`` by
+sequence of observations (frames).  Both carry a ``SIRCarry(key,
+ensemble)`` — ``ParticleEnsemble`` is the currency of the whole stack
+(DESIGN.md §9).  The distributed builder is a *per-shard* program
+(collectives by ``axis_name``) to be wrapped in ``shard_map`` by
 ``repro.core.filters``.
+
+``ess_resample`` is the one SIR resampling decision (Alg. 1 lines 15–18)
+shared by the single-device step, the ``FilterBank``, and SMC decoding
+(``repro.serve.smc_decode``): ESS check, conditional resample, identity
+ancestors when the threshold is not hit.
 """
 from __future__ import annotations
 
@@ -15,9 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import distributed as dist
+from repro.core import particles
 from repro.core import resampling
 from repro.core import runtime
-from repro.core.particles import (effective_sample_size, normalized_weights)
+from repro.core.particles import ParticleEnsemble, effective_sample_size
 
 Array = jax.Array
 
@@ -47,6 +55,11 @@ class SIRConfig:
     always_resample: bool = False
 
 
+class SIRCarry(NamedTuple):
+    key: Array
+    ensemble: ParticleEnsemble
+
+
 class StepOutput(NamedTuple):
     estimate: Any        # MMSE state estimate (paper §II)
     ess: Array           # global effective sample size
@@ -55,52 +68,75 @@ class StepOutput(NamedTuple):
     diag: dict           # DRA diagnostics (links, overflow, q, ...)
 
 
+class ResampleDecision(NamedTuple):
+    ancestors: Array     # (N,) — identity permutation when not resampled
+    ess: Array           # N_eff before resampling
+    log_z: Array         # logsumexp of the incoming weights
+    resampled: Array     # bool
+
+
+def ess_resample(key: Array, log_weights: Array, *, ess_frac: float,
+                 resampler: str = "systematic",
+                 always: bool = False) -> ResampleDecision:
+    """Alg. 1 lines 15–18 as one shared op: ESS check + conditional
+    resample.  Gathering ``state[ancestors]`` commits the decision — the
+    ancestors are the identity when the threshold is not hit, so callers
+    need no extra select (the resample itself still runs unconditionally,
+    keeping the SPMD schedule static, DESIGN.md §2.3).
+
+    Weight-reset conventions differ per caller (tracking normalizes every
+    step, decoding only on resample) and stay at the call site.
+    """
+    n = log_weights.shape[0]
+    ess = effective_sample_size(log_weights)
+    log_z = jax.scipy.special.logsumexp(log_weights)
+    resampled = jnp.logical_or(ess < ess_frac * n, jnp.asarray(always))
+    counts = resampling.RESAMPLERS[resampler](key, log_weights, n, capacity=n)
+    ancestors = resampling.counts_to_ancestors(counts, n)
+    ancestors = jnp.where(resampled, ancestors,
+                          jnp.arange(n, dtype=ancestors.dtype))
+    return ResampleDecision(ancestors, ess, log_z, resampled)
+
+
 # ---------------------------------------------------------------------------
 # Single-device SIR (reference semantics for everything else)
 # ---------------------------------------------------------------------------
 
 def make_sir_step(model: StateSpaceModel, cfg: SIRConfig):
     n = cfg.n_particles
-    counts_fn = resampling.RESAMPLERS[cfg.resampler]
 
-    def step(carry, observation):
-        key, state, lw = carry
+    def step(carry: SIRCarry, observation):
+        key, ens = carry
         key, k_dyn, k_res = jax.random.split(key, 3)
-        state = model.dynamics_sample(k_dyn, state)
-        ll = model.log_likelihood(state, observation)
-        lw = lw + ll
+        ens = particles.advance(ens, k_dyn, model.dynamics_sample)
+        ens = particles.reweight(ens, model.log_likelihood(ens.state,
+                                                           observation))
+        estimate = particles.weighted_mean(ens)
 
-        lz = jax.scipy.special.logsumexp(lw)
-        ess = effective_sample_size(lw)
-        w = normalized_weights(lw)
-        estimate = jax.tree_util.tree_map(
-            lambda x: jnp.tensordot(w.astype(x.dtype), x, axes=1), state)
-
-        do_resample = jnp.logical_or(ess < cfg.ess_frac * n,
-                                     jnp.asarray(cfg.always_resample))
-        counts = counts_fn(k_res, lw, n, capacity=n)
-        ancestors = resampling.counts_to_ancestors(counts, n)
-        res_state = jax.tree_util.tree_map(lambda x: x[ancestors], state)
-        state = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(do_resample, a, b), res_state, state)
-        # invariant: logsumexp(lw) == 0 entering every step, so ``lz`` IS
+        dec = ess_resample(k_res, ens.log_weights, ess_frac=cfg.ess_frac,
+                           resampler=cfg.resampler,
+                           always=cfg.always_resample)
+        state = jax.tree_util.tree_map(lambda x: x[dec.ancestors], ens.state)
+        # invariant: logsumexp(lw) == 0 entering every step, so ``log_z`` IS
         # the marginal-likelihood increment log p(z_k | Z^{k-1}).
-        lw = jnp.where(do_resample, jnp.full_like(lw, -jnp.log(n)), lw - lz)
+        lw = jnp.where(dec.resampled,
+                       jnp.full_like(ens.log_weights, -jnp.log(n)),
+                       ens.log_weights - dec.log_z)
+        ens = ens.replace(state=state, log_weights=lw)
 
-        out = StepOutput(estimate, ess, lz, do_resample, {})
-        return (key, state, lw), out
+        out = StepOutput(estimate, dec.ess, dec.log_z, dec.resampled, {})
+        return SIRCarry(key, ens), out
 
     return step
 
 
 def run_sir(key: Array, model: StateSpaceModel, cfg: SIRConfig,
-            observations: Any):
+            observations: Any) -> tuple[SIRCarry, StepOutput]:
     """Run the filter over a stacked observation sequence."""
     k_init, k_run = jax.random.split(key)
-    state = model.init_sampler(k_init, cfg.n_particles)
-    lw = jnp.full((cfg.n_particles,), -jnp.log(cfg.n_particles))
+    ens = particles.init_ensemble(k_init, model.init_sampler, cfg.n_particles)
     step = make_sir_step(model, cfg)
-    carry, outs = jax.lax.scan(step, (k_run, state, lw), observations)
+    carry, outs = jax.lax.scan(step, SIRCarry(k_run, ens), observations)
     return carry, outs
 
 
@@ -111,18 +147,19 @@ def run_sir(key: Array, model: StateSpaceModel, cfg: SIRConfig,
 def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
                               dra: dist.DRAConfig, axis_name: str = "data"):
     """Per-shard SIR step.  ``cfg.n_particles`` is the GLOBAL count; each of
-    the P shards holds C = n_particles / P slots."""
+    the P shards carries an ensemble of C = n_particles / P slots."""
 
-    def step(carry, observation):
-        key, state, lw = carry
-        c = lw.shape[0]
+    def step(carry: SIRCarry, observation):
+        key, ens = carry
+        c = ens.capacity
         p = runtime.axis_size(axis_name)
         n_total = c * p
         key, k_dyn, k_res = jax.random.split(key, 3)
 
-        state = model.dynamics_sample(k_dyn, state)
-        ll = model.log_likelihood(state, observation)
-        lw = jnp.where(jnp.isfinite(lw), lw + ll, -jnp.inf)
+        ens = particles.advance(ens, k_dyn, model.dynamics_sample)
+        ll = model.log_likelihood(ens.state, observation)
+        ens = particles.reweight(ens, ll)
+        lw = ens.log_weights
         max_ll = jnp.max(jnp.where(jnp.isfinite(lw), ll, -jnp.inf))
 
         glz = dist.global_log_z(lw, axis_name)
@@ -132,29 +169,29 @@ def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
         w = jnp.exp(jnp.where(jnp.isfinite(lw), lw - glz, -jnp.inf))
         estimate = jax.tree_util.tree_map(
             lambda x: runtime.psum(jnp.tensordot(w.astype(x.dtype), x, axes=1),
-                                   axis_name), state)
+                                   axis_name), ens.state)
 
         do_resample = jnp.logical_or(ess < cfg.ess_frac * n_total,
                                      jnp.asarray(cfg.always_resample))
 
         if dra.kind == "mpf":
-            r_state, r_lw, diag = dist.mpf_resample(k_res, state, lw, dra, axis_name)
+            r_ens, diag = dist.mpf_resample(k_res, ens, dra, axis_name)
         elif dra.kind == "rna":
-            r_state, r_lw, diag = dist.rna_resample(k_res, state, lw, dra, axis_name)
+            r_ens, diag = dist.rna_resample(k_res, ens, dra, axis_name)
         elif dra.kind == "arna":
-            r_state, r_lw, diag = dist.arna_resample(k_res, state, lw, dra,
-                                                     axis_name, max_ll)
+            r_ens, diag = dist.arna_resample(k_res, ens, dra, axis_name,
+                                             max_ll)
         elif dra.kind == "rpa":
-            r_state, r_lw, diag = dist.rpa_resample(k_res, state, lw, dra, axis_name)
+            r_ens, diag = dist.rpa_resample(k_res, ens, dra, axis_name)
         else:
             raise ValueError(dra.kind)
 
         # select keeps SPMD collective schedule static (DESIGN.md §2.3)
-        state = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(do_resample, a, b), r_state, state)
-        lw = jnp.where(do_resample, r_lw, lw - glz)
+        kept = ens.replace(log_weights=lw - glz)
+        ens = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(do_resample, a, b), r_ens, kept)
 
         out = StepOutput(estimate, ess, glz, do_resample, diag)
-        return (key, state, lw), out
+        return SIRCarry(key, ens), out
 
     return step

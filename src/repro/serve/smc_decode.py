@@ -10,9 +10,12 @@ caches are gathered by ancestor index — the *compressed particles* idea of
 paper §V: only ancestor indices + multiplicities are exchanged, replica
 "creation" is a local cache gather.
 
-This mirrors SIR (paper Alg. 1) exactly:
-  propose (sample token) → weight (importance ratio) → ESS check →
-  resample (systematic, cache gather).
+This IS SIR (paper Alg. 1), not a reimplementation of it: the ESS check
+and conditional systematic resample are the shared core op
+``repro.core.smc.ess_resample`` — the same decision the tracking filter
+and the FilterBank run — vmapped over the prompt batch.  Only the
+weight-reset convention differs (decoding keeps unnormalized weights
+between resamples) and stays here.
 The per-prompt log-normalizer estimate Σ log mean w is returned, which is
 the SMC estimate of log p(sequence continuation mass) — useful for
 best-of-K reranking at no extra model cost.
@@ -26,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import resampling
+from repro.core.smc import ess_resample
 from repro.models.lm import model as M
 
 Array = jax.Array
@@ -45,7 +48,6 @@ class SMCDecodeConfig:
 def _smc_loop(params, cfg: ArchConfig, smc: SMCDecodeConfig, caches,
               first_tokens, start_pos, key):
     k_part = smc.n_particles
-    counts_fn = resampling.RESAMPLERS[smc.resampler]
 
     def body(carry, _):
         tokens, pos, caches, lw, log_z, key = carry
@@ -59,33 +61,20 @@ def _smc_loop(params, cfg: ArchConfig, smc: SMCDecodeConfig, caches,
                - jnp.take_along_axis(q_log, tok[:, None], -1))[:, 0]
         lw = lw + inc.reshape(lw.shape)                      # (B, K)
 
-        # per-prompt ESS and resampling decision
-        wn = jax.nn.softmax(lw, axis=-1)
-        ess = 1.0 / jnp.sum(jnp.square(wn), axis=-1)         # (B,)
-        need = ess < smc.ess_frac * k_part
-
-        def resample_one(key_i, lw_i):
-            counts = counts_fn(key_i, lw_i, k_part, capacity=k_part)
-            return resampling.counts_to_ancestors(counts, k_part)
-
+        # the shared SIR decision (Alg. 1 lines 15–18), one prompt per row;
+        # ancestors come back as the identity where the ESS threshold holds
         b = lw.shape[0]
-        anc = jax.vmap(resample_one)(jax.random.split(k_r, b), lw)  # (B, K)
-        identity = jnp.broadcast_to(jnp.arange(k_part), (b, k_part))
-        anc = jnp.where(need[:, None], anc, identity)
-        # log-normalizer increment (before weight reset)
-        log_z = log_z + jnp.where(
-            need,
-            jax.scipy.special.logsumexp(lw, axis=-1) - jnp.log(k_part),
-            0.0)
+        dec = jax.vmap(functools.partial(
+            ess_resample, ess_frac=smc.ess_frac,
+            resampler=smc.resampler))(jax.random.split(k_r, b), lw)
+        anc, ess, need = dec.ancestors, dec.ess, dec.resampled  # (B,K),(B,),(B,)
+        # log-normalizer increment (before weight reset); decoding keeps
+        # unnormalized weights between resamples, so the reset is to zero
+        log_z = log_z + jnp.where(need, dec.log_z - jnp.log(k_part), 0.0)
         lw = jnp.where(need[:, None], jnp.zeros_like(lw), lw)
 
         # compressed-particle cache exchange: gather by ancestor index
         flat_anc = (anc + jnp.arange(b)[:, None] * k_part).reshape(-1)
-
-        def gather(x):
-            return x[flat_anc] if x.ndim >= 1 and x.shape[0] == b * k_part \
-                else x
-
         caches = jax.tree_util.tree_map(_make_gather(flat_anc, b * k_part),
                                         caches)
         tok = tok.reshape(b * k_part)[flat_anc]

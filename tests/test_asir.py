@@ -14,9 +14,9 @@ def test_asir_tracks_with_bounded_quality_loss():
     exact = make_tracking_model(cfg)
     movie = generate_movie(jax.random.key(0), cfg, n_frames=30)
     sir = SIRConfig(n_particles=8192, ess_frac=0.5)
-    (_, _, _), outs_e = run_sir(jax.random.key(1), exact, sir, movie.frames)
+    _, outs_e = run_sir(jax.random.key(1), exact, sir, movie.frames)
     asir = make_asir_model(exact, cfg, ASIRConfig(grid=32))
-    (_, _, _), outs_a = run_sir(jax.random.key(1), asir, sir, movie.frames)
+    _, outs_a = run_sir(jax.random.key(1), asir, sir, movie.frames)
     r_e = float(tracking_rmse(outs_e.estimate, movie.trajectories[:, 0],
                               warmup=10))
     r_a = float(tracking_rmse(outs_a.estimate, movie.trajectories[:, 0],

@@ -1,0 +1,140 @@
+"""Ensemble-contract invariants (DESIGN.md §9, paper §V/§VI): capacity vs
+logical size, -inf empty slots, counts semantics, and the compressed ↔
+materialized agreement of the weight algebra.
+
+The checks here run on seeded random ensembles so they are always part of
+tier-1; tests/test_particles_prop.py drives the same check functions
+through hypothesis when the dev extra is installed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import particles as P
+
+SEEDS = range(8)
+
+
+def random_compressed_ensemble(seed: int, n: int | None = None
+                               ) -> P.ParticleEnsemble:
+    """A compressed ensemble with counts in 0..4 (≥1 live unit) and live
+    log-weights in a stable range; empty slots carry -inf."""
+    key = jax.random.key(seed)
+    k_n, k_c, k_lw, k_s = jax.random.split(key, 4)
+    if n is None:
+        n = int(jax.random.randint(k_n, (), 3, 48))
+    counts = jax.random.randint(k_c, (n,), 0, 5, dtype=jnp.int32)
+    counts = counts.at[0].set(jnp.maximum(counts[0], 1))  # ≥ 1 live unit
+    lw = jax.random.uniform(k_lw, (n,), minval=-20.0, maxval=5.0)
+    lw = jnp.where(counts > 0, lw, -jnp.inf)
+    state = jax.random.normal(k_s, (n, 3))
+    return P.ParticleEnsemble(state=state, log_weights=lw, counts=counts)
+
+
+# ---------------------------------------------------------------------------
+# Shared invariant checks (also driven by hypothesis in *_prop.py)
+# ---------------------------------------------------------------------------
+
+def check_compressed_and_materialized_agree(ens: P.ParticleEnsemble) -> None:
+    """log_sum_weights / normalized_weights / weighted_mean are identical
+    on a compressed ensemble and its materialized expansion."""
+    total = int(P.logical_size(ens))
+    mat = P.materialize(ens, total)
+    assert int(P.logical_size(mat)) == total
+
+    np.testing.assert_allclose(
+        np.asarray(P.log_sum_weights(ens.log_weights, ens.counts)),
+        np.asarray(P.log_sum_weights(mat.log_weights, mat.counts)),
+        rtol=1e-5, atol=1e-6)
+
+    # per-ancestor sums of the materialized normalized weights equal the
+    # compressed normalized weights
+    w_comp = np.asarray(P.normalized_weights(ens.log_weights, ens.counts))
+    w_mat = np.asarray(P.normalized_weights(mat.log_weights, mat.counts))
+    anc = np.repeat(np.arange(ens.capacity), np.asarray(ens.counts))
+    w_grouped = np.zeros(ens.capacity)
+    np.add.at(w_grouped, anc, w_mat)
+    np.testing.assert_allclose(w_grouped, w_comp, atol=1e-5)
+
+    for a, b in zip(jax.tree_util.tree_leaves(P.weighted_mean(ens)),
+                    jax.tree_util.tree_leaves(P.weighted_mean(mat))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def check_resample_conserves_logical_size(ens: P.ParticleEnsemble,
+                                          n_out: int, seed: int,
+                                          scheme: str) -> None:
+    """Σ offspring counts == n_out through resample_compressed, and
+    materialization preserves it (when capacity admits)."""
+    cap = max(n_out, ens.capacity)
+    out = P.resample_compressed(jax.random.key(seed), ens, n_out,
+                                scheme=scheme, capacity=cap)
+    assert int(P.logical_size(out)) == n_out
+    mat = P.materialize(out, n_out)
+    assert int(P.logical_size(mat)) == n_out
+    # live slots carry the normalized uniform weight, empty slots -inf
+    lw = np.asarray(mat.log_weights)
+    np.testing.assert_allclose(lw[np.isfinite(lw)], -np.log(n_out),
+                               atol=1e-6)
+
+
+def check_reweight_never_revives_empty_slots(ens: P.ParticleEnsemble) -> None:
+    out = P.reweight(ens, jnp.ones((ens.capacity,)))
+    lw0 = np.asarray(ens.log_weights)
+    lw1 = np.asarray(out.log_weights)
+    assert (lw1[~np.isfinite(lw0)] == -np.inf).all()
+    np.testing.assert_allclose(lw1[np.isfinite(lw0)],
+                               lw0[np.isfinite(lw0)] + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Always-on seeded tests
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_compressed_and_materialized_agree(seed):
+    check_compressed_and_materialized_agree(random_compressed_ensemble(seed))
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("scheme", ["systematic", "stratified",
+                                    "multinomial", "residual"])
+def test_local_resample_conserves_logical_size(seed, scheme):
+    ens = random_compressed_ensemble(seed)
+    n_out = 1 + (seed * 17) % 64
+    check_resample_conserves_logical_size(ens, n_out, seed + 1000, scheme)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_materialized_resample_is_full_capacity(seed):
+    ens = random_compressed_ensemble(seed)
+    out = P.resample(jax.random.key(seed), ens)
+    assert int(P.logical_size(out)) == ens.capacity
+    assert np.asarray(out.counts).tolist() == [1] * ens.capacity
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_reweight_never_revives_empty_slots(seed):
+    check_reweight_never_revives_empty_slots(random_compressed_ensemble(seed))
+
+
+def test_init_ensemble_is_normalized():
+    ens = P.init_ensemble(jax.random.key(0),
+                          lambda k, n: jax.random.normal(k, (n, 2)), 64)
+    np.testing.assert_allclose(
+        float(P.log_sum_weights(ens.log_weights, ens.counts)), 0.0,
+        atol=1e-5)
+    assert int(P.logical_size(ens)) == 64
+
+
+def test_materialize_truncates_overflow_deterministically():
+    """Logical size beyond capacity (post-overflow shards) truncates the
+    tail instead of corrupting slots — DESIGN.md §9."""
+    ens = P.ParticleEnsemble(
+        state=jnp.arange(4.0)[:, None],
+        log_weights=jnp.zeros((4,)),
+        counts=jnp.asarray([3, 3, 3, 3], jnp.int32))
+    mat = P.materialize(ens, 8)
+    assert int(P.logical_size(mat)) == 8
+    assert np.isfinite(np.asarray(mat.log_weights)).sum() == 8

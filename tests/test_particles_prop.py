@@ -1,0 +1,53 @@
+"""Hypothesis-driven ensemble-contract properties (DESIGN.md §9) — the
+same invariant checks as tests/test_particles.py, explored over arbitrary
+counts/weights instead of a fixed seed sweep."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the dev extra: pip install -e .[dev]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import particles as P  # noqa: E402
+from test_particles import (  # noqa: E402  (sibling test module)
+    check_compressed_and_materialized_agree,
+    check_resample_conserves_logical_size,
+    check_reweight_never_revives_empty_slots)
+
+
+@st.composite
+def compressed_ensembles(draw):
+    n = draw(st.integers(3, 48))
+    counts = draw(st.lists(st.integers(0, 4), min_size=n, max_size=n))
+    if sum(counts) == 0:
+        counts[draw(st.integers(0, n - 1))] = 1
+    lw = draw(st.lists(st.floats(-20, 5, allow_nan=False), min_size=n,
+                       max_size=n))
+    seed = draw(st.integers(0, 2 ** 16))
+    state = jax.random.normal(jax.random.key(seed), (n, 3))
+    counts = jnp.asarray(counts, jnp.int32)
+    lw = jnp.where(counts > 0, jnp.asarray(lw, jnp.float32), -jnp.inf)
+    return P.ParticleEnsemble(state=state, log_weights=lw, counts=counts)
+
+
+@given(ens=compressed_ensembles())
+@settings(max_examples=40, deadline=None)
+def test_compressed_and_materialized_agree(ens):
+    check_compressed_and_materialized_agree(ens)
+
+
+@given(ens=compressed_ensembles(), n_out=st.integers(1, 64),
+       seed=st.integers(0, 2 ** 16),
+       scheme=st.sampled_from(["systematic", "stratified", "multinomial",
+                               "residual"]))
+@settings(max_examples=40, deadline=None)
+def test_local_resample_conserves_logical_size(ens, n_out, seed, scheme):
+    check_resample_conserves_logical_size(ens, n_out, seed, scheme)
+
+
+@given(ens=compressed_ensembles())
+@settings(max_examples=30, deadline=None)
+def test_reweight_never_revives_empty_slots(ens):
+    check_reweight_never_revives_empty_slots(ens)

@@ -56,7 +56,7 @@ def test_pf_tracks_kalman(resampler):
 
     model = make_lg_model()
     cfg = SIRConfig(n_particles=8192, ess_frac=0.5, resampler=resampler)
-    (_, _, _), outs = run_sir(k_pf, model, cfg, zs)
+    _, outs = run_sir(k_pf, model, cfg, zs)
     pf_means = np.asarray(outs.estimate)[:, 0]
     kf_means = kalman_means(zs)
     # Monte-Carlo error ~ 1/sqrt(N); generous but tight enough to catch
@@ -70,8 +70,8 @@ def test_log_marginal_matches_kalman_evidence():
     zs = jnp.asarray(np.asarray(
         jax.random.normal(key, (30,))) * 0.8)
     model = make_lg_model()
-    (_, _, _), outs = run_sir(jax.random.key(2), model,
-                              SIRConfig(n_particles=16384, ess_frac=0.5), zs)
+    _, outs = run_sir(jax.random.key(2), model,
+                      SIRConfig(n_particles=16384, ess_frac=0.5), zs)
     # Kalman evidence
     m, p, ll = 0.0, 4.0, 0.0
     for z in np.asarray(zs):
@@ -91,8 +91,8 @@ def test_log_marginal_matches_kalman_evidence():
 def test_ess_and_resampling_flags():
     model = make_lg_model()
     zs = jnp.zeros((10,))
-    (_, _, _), outs = run_sir(jax.random.key(0), model,
-                              SIRConfig(n_particles=512, ess_frac=0.99), zs)
+    _, outs = run_sir(jax.random.key(0), model,
+                      SIRConfig(n_particles=512, ess_frac=0.99), zs)
     # with a 0.99 threshold, resampling should trigger nearly every step
     assert int(outs.resampled.sum()) >= 8
     assert float(outs.ess.min()) > 0

@@ -2,6 +2,7 @@
 framework substrate glued together)."""
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core import SIRConfig, ParallelParticleFilter
 from repro.core.distributed import DRAConfig
@@ -9,6 +10,7 @@ from repro.data.synthetic_movie import generate_movie, tracking_rmse
 from repro.models.tracking import TrackingConfig, make_tracking_model
 
 
+@pytest.mark.slow
 def test_paper_pipeline_end_to_end():
     """Movie synthesis → SIR tracking → RMSE, the full §VII pipeline."""
     cfg = TrackingConfig(img_size=(96, 96), v_init=1.0)
@@ -25,6 +27,7 @@ def test_paper_pipeline_end_to_end():
     assert 0 < float(res.ess.min()) <= 8192.0 + 1e-3
 
 
+@pytest.mark.slow
 def test_multi_spot_movie_single_target_lock():
     """With several spots in frame, the filter locks onto one target and
     stays locked (the paper's single-object scenario; Fig 4 shows many)."""

@@ -18,9 +18,9 @@ def test_noiseless_tracking_subpixel():
                          sigma_like=0.5, v_init=1.5)
     model = make_tracking_model(cfg)
     movie = generate_movie(jax.random.key(0), cfg, n_frames=25)
-    (_, _, _), outs = run_sir(jax.random.key(1), model,
-                              SIRConfig(n_particles=8192, ess_frac=0.5),
-                              movie.frames)
+    _, outs = run_sir(jax.random.key(1), model,
+                      SIRConfig(n_particles=8192, ess_frac=0.5),
+                      movie.frames)
     rmse = float(tracking_rmse(outs.estimate, movie.trajectories[:, 0]))
     assert rmse < 0.1, rmse
 
@@ -30,9 +30,9 @@ def test_snr2_tracking_converges():
     cfg = TrackingConfig(img_size=(64, 64), v_init=1.5)
     model = make_tracking_model(cfg)
     movie = generate_movie(jax.random.key(0), cfg, n_frames=40)
-    (_, _, _), outs = run_sir(jax.random.key(1), model,
-                              SIRConfig(n_particles=8192, ess_frac=0.5),
-                              movie.frames)
+    _, outs = run_sir(jax.random.key(1), model,
+                      SIRConfig(n_particles=8192, ess_frac=0.5),
+                      movie.frames)
     rmse = float(tracking_rmse(outs.estimate, movie.trajectories[:, 0],
                                warmup=10))
     assert rmse < 1.5, rmse

@@ -1,7 +1,15 @@
 """Multi-device (8 CPU) checks for the distributed resampling algorithms.
 
 Run as a subprocess by tests/test_distributed.py so the pytest process
-keeps its single default device.  Prints one JSON dict.
+keeps its single default device.  Prints one JSON dict with sections:
+
+  dra          — tracking quality of every DRA family (paper §VII.E)
+  parity       — refactor-guard trajectories for the golden configs of
+                 tests/golden/sir_parity.json (compared by the test)
+  bank         — FilterBank-vs-independent-runs agreement on 2-D meshes
+  routing      — compressed-routing multiplicity conservation (paper §V)
+  conservation — multi-seed logical-size / weight-attachment properties
+                 through ring exchange and RPA routing
 """
 import json
 
@@ -13,8 +21,10 @@ import jax                      # noqa: E402
 import jax.numpy as jnp        # noqa: E402
 import numpy as np             # noqa: E402
 
-from repro.core import SIRConfig, ParallelParticleFilter   # noqa: E402
-from repro.core.distributed import DRAConfig               # noqa: E402
+from repro.core import (SIRConfig, FilterBank,              # noqa: E402
+                        ParallelParticleFilter, ParticleEnsemble)
+from repro.core import particles                            # noqa: E402
+from repro.core.distributed import DRAConfig, _ring_exchange  # noqa: E402
 from repro.core import dlb                                  # noqa: E402
 from repro.launch.mesh import make_host_mesh                # noqa: E402
 from repro.models.tracking import (TrackingConfig,          # noqa: E402
@@ -22,6 +32,9 @@ from repro.models.tracking import (TrackingConfig,          # noqa: E402
 from repro.data.synthetic_movie import (generate_movie,     # noqa: E402
                                         tracking_rmse)
 from jax.sharding import PartitionSpec as P                 # noqa: E402
+
+PARITY_KINDS = [("mpf", {}), ("rna", {"exchange_ratio": 0.25}),
+                ("arna", {}), ("rpa", {"scheduler": "lgs"})]
 
 
 def dra_checks() -> dict:
@@ -75,6 +88,69 @@ def dra_checks() -> dict:
     return out
 
 
+def parity_trajectories() -> dict:
+    """The exact configs recorded in tests/golden/sir_parity.json — the
+    test compares these against the pre-refactor goldens at 1e-5."""
+    cfg = TrackingConfig(img_size=(48, 48), v_init=1.5)
+    model = make_tracking_model(cfg)
+    movie = generate_movie(jax.random.key(0), cfg, n_frames=8)
+    mesh = make_host_mesh(8)
+    out = {}
+    for kind, extra in PARITY_KINDS:
+        pf = ParallelParticleFilter(
+            model=model, sir=SIRConfig(n_particles=1024, ess_frac=0.5),
+            dra=DRAConfig(kind=kind, **extra), mesh=mesh)
+        res = pf.run(jax.random.key(1), movie.frames)
+        out[kind] = {
+            "estimates": np.asarray(res.estimates).tolist(),
+            "ess": np.asarray(res.ess).tolist(),
+            "log_marginal": np.asarray(res.log_marginal).tolist(),
+        }
+    return out
+
+
+def bank_checks() -> dict:
+    """FilterBank must reproduce independent ParallelParticleFilter runs
+    member-for-member while tiling B × C particles over a 2-D mesh."""
+    cfg = TrackingConfig(img_size=(48, 48), v_init=1.5)
+    model = make_tracking_model(cfg)
+    sir = SIRConfig(n_particles=512, ess_frac=0.5)
+    obs = jnp.stack([generate_movie(jax.random.key(s), cfg,
+                                    n_frames=6).frames for s in (0, 5)])
+    keys = jnp.stack([jax.random.key(11), jax.random.key(12)])
+    out = {}
+
+    # bank_axis: 2 bank shards × 4 particle shards (ring exchange under vmap)
+    dra = DRAConfig(kind="rna", exchange_ratio=0.25)
+    mesh2d = runtime.make_mesh((2, 4), ("bank", "data"))
+    res = FilterBank(model=model, sir=sir, dra=dra, mesh=mesh2d,
+                     bank_axis="bank").run(keys, obs)
+    mesh4 = make_host_mesh(4)
+    diffs = []
+    for i in range(2):
+        single = ParallelParticleFilter(model=model, sir=sir, dra=dra,
+                                        mesh=mesh4).run(keys[i], obs[i])
+        diffs.append(float(np.max(np.abs(
+            np.asarray(res.estimates[i]) - np.asarray(single.estimates)))))
+    out["rna_bank_axis_max_diff"] = max(diffs)
+    out["final_state_shape"] = list(np.asarray(
+        jax.tree_util.tree_leaves(res.final.state)[0]).shape)
+
+    # replicated bank over an 8-way particle mesh (fused all_to_all routing
+    # under vmap)
+    dra = DRAConfig(kind="rpa", scheduler="lgs")
+    mesh8 = make_host_mesh(8)
+    res = FilterBank(model=model, sir=sir, dra=dra, mesh=mesh8).run(keys, obs)
+    diffs = []
+    for i in range(2):
+        single = ParallelParticleFilter(model=model, sir=sir, dra=dra,
+                                        mesh=mesh8).run(keys[i], obs[i])
+        diffs.append(float(np.max(np.abs(
+            np.asarray(res.estimates[i]) - np.asarray(single.estimates)))))
+    out["rpa_replicated_max_diff"] = max(diffs)
+    return out
+
+
 def routing_conservation() -> dict:
     """route_compressed conserves total multiplicity exactly (paper §V)."""
     mesh = make_host_mesh(8)
@@ -84,12 +160,13 @@ def routing_conservation() -> dict:
     def shard_fn(counts, states):
         counts = counts[0]            # strip the sharded leading dim
         states = states[0]
-        my = jax.lax.axis_index("data")
-        alloc = jax.lax.all_gather(jnp.sum(counts), "data")
+        my = runtime.axis_index("data")
+        alloc = runtime.all_gather(jnp.sum(counts), "data")
         targets = dlb.balanced_targets(jnp.sum(alloc), p)
         schedule = dlb.schedule_sgs(alloc, targets)
-        route = dlb.route_compressed(states, counts, jnp.zeros((c,)),
-                                     schedule[my], k_cap=32,
+        ens = ParticleEnsemble(state=states, log_weights=jnp.zeros((c,)),
+                               counts=counts)
+        route = dlb.route_compressed(ens, schedule[my], k_cap=32,
                                      axis_name="data")
         kept = jnp.sum(route.kept_counts)
         received = jnp.sum(route.recv_counts)
@@ -109,6 +186,90 @@ def routing_conservation() -> dict:
     }
 
 
+def conservation_properties(n_seeds: int = 6) -> dict:
+    """Multi-seed ensemble invariants on the real 8-shard collectives:
+
+    * ring exchange preserves the global log-weight multiset and the
+      global logical size (full-acceptance case m_valid == m_buf);
+    * RPA-style routing (route → merge, compressed end-to-end) preserves
+      the global logical size AND every replica's weight stays attached
+      to its own particle (lw was constructed as f(state); after routing
+      + materialization lw == f(state) must still hold slot-wise).
+    """
+    mesh = make_host_mesh(8)
+    p = 8
+    c = 64
+    m_buf = 16
+
+    def ring_fn(lw):
+        lw = lw[0]
+        state = {"x": lw * 2.0}       # tag each particle with its weight
+        s, out = _ring_exchange(state, lw, m_buf, jnp.asarray(m_buf), "data")
+        return out[None], s["x"][None]
+
+    ring = runtime.shard_map(ring_fn, mesh, in_specs=(P("data", None),),
+                             out_specs=(P("data", None), P("data", None)))
+
+    def route_fn(counts, states):
+        counts = counts[0]
+        states = states[0]
+        my = runtime.axis_index("data")
+        alloc = runtime.all_gather(jnp.sum(counts), "data")
+        targets = dlb.balanced_targets(jnp.sum(alloc), p)
+        schedule = dlb.schedule_sgs(alloc, targets)
+        lw = jnp.where(counts > 0, -0.1 * states[:, 0], -jnp.inf)
+        ens = ParticleEnsemble(state=states, log_weights=lw, counts=counts)
+        route = dlb.route_compressed(ens, schedule[my], k_cap=64,
+                                     axis_name="data")
+        merged = dlb.merge_routed(ens, route)
+        out = particles.materialize(merged, 2 * c)
+        return (particles.logical_size(merged)[None],
+                out.log_weights[None],
+                jax.tree_util.tree_leaves(out.state)[0][None])
+
+    route = runtime.shard_map(
+        route_fn, mesh, in_specs=(P("data", None), P("data", None, None)),
+        out_specs=(P("data"), P("data", None), P("data", None, None)))
+
+    ring_lw_err = 0.0
+    ring_attach_err = 0.0
+    route_size_err = 0
+    route_attach_err = 0.0
+    for seed in range(n_seeds):
+        key = jax.random.key(100 + seed)
+        lw = jax.random.normal(key, (p, c))
+        out_lw, out_x = ring(lw)
+        # global multiset of log-weights is preserved by the ring
+        ring_lw_err = max(ring_lw_err, float(np.max(np.abs(
+            np.sort(np.asarray(out_lw).ravel())
+            - np.sort(np.asarray(lw).ravel())))))
+        # each travelling particle kept its own payload
+        ring_attach_err = max(ring_attach_err, float(np.max(np.abs(
+            np.asarray(out_x) - 2.0 * np.asarray(out_lw)))))
+
+        counts = jax.random.randint(key, (p, c), 0, 3, dtype=jnp.int32)
+        states = jax.random.normal(jax.random.fold_in(key, 1), (p, c, 5))
+        sizes, out_lw, out_states = route(counts, states)
+        route_size_err = max(route_size_err, abs(
+            int(np.asarray(sizes).sum()) - int(counts.sum())))
+        # every valid replica's weight must still equal f(its own state)
+        out_lw = np.asarray(out_lw)
+        want = -0.1 * np.asarray(out_states)[..., 0]
+        valid = np.isfinite(out_lw)
+        route_attach_err = max(route_attach_err, float(np.max(np.abs(
+            np.where(valid, out_lw - want, 0.0)))))
+    return {
+        "seeds": n_seeds,
+        "ring_lw_multiset_err": ring_lw_err,
+        "ring_attachment_err": ring_attach_err,
+        "route_logical_size_err": route_size_err,
+        "route_weight_attachment_err": route_attach_err,
+    }
+
+
 if __name__ == "__main__":
     print(json.dumps({"dra": dra_checks(),
-                      "routing": routing_conservation()}))
+                      "parity": parity_trajectories(),
+                      "bank": bank_checks(),
+                      "routing": routing_conservation(),
+                      "conservation": conservation_properties()}))
