@@ -20,6 +20,13 @@ def main() -> None:
     ap.add_argument("--frames", type=int, default=15)
     ap.add_argument("--img", type=int, default=256)
     ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--domain", action="store_true",
+                    help="input-space domain decomposition (DESIGN.md §10): "
+                         "tile-sharded halo slabs instead of replicated "
+                         "frames")
+    ap.add_argument("--k-cap", type=int, default=0,
+                    help="migration window per destination shard "
+                         "(0 = ensemble capacity: exact, never overflows)")
     args = ap.parse_args()
 
     from repro.core import runtime
@@ -29,7 +36,8 @@ def main() -> None:
     from repro.core import SIRConfig, ParallelParticleFilter
     from repro.core.distributed import DRAConfig
     from repro.launch.mesh import make_host_mesh
-    from repro.models.tracking import TrackingConfig, make_tracking_model
+    from repro.models.tracking import (TrackingConfig, make_domain_spec,
+                                       make_tracking_model)
     from repro.data.synthetic_movie import generate_movie, tracking_rmse
 
     cfg = TrackingConfig(img_size=(args.img, args.img), v_init=1.5)
@@ -38,9 +46,14 @@ def main() -> None:
     mesh = make_host_mesh(args.devices)
     dra = DRAConfig(kind=args.dra, scheduler=args.scheduler,
                     exchange_ratio=args.exchange_ratio)
+    spec = None
+    if args.domain:
+        spec = make_domain_spec(cfg, args.devices,
+                                k_cap=args.k_cap or None)
     pf = ParallelParticleFilter(
         model=model, sir=SIRConfig(n_particles=args.particles, ess_frac=0.5),
-        dra=dra, mesh=mesh if args.devices > 1 else None)
+        dra=dra, mesh=mesh if (args.devices > 1 or args.domain) else None,
+        domain=spec)
 
     def once():
         res = pf.run(jax.random.key(1), movie.frames)
@@ -54,13 +67,24 @@ def main() -> None:
     dt = (time.time() - t0) / args.repeats
 
     rmse = float(tracking_rmse(res.estimates, movie.trajectories[:, 0]))
-    print(json.dumps({
+    out = {
         "devices": args.devices, "dra": args.dra,
         "scheduler": args.scheduler,
         "exchange_ratio": args.exchange_ratio,
         "particles": args.particles, "frames": args.frames,
-        "seconds": dt, "rmse": rmse,
-    }))
+        "seconds": dt, "rmse": rmse, "domain": bool(args.domain),
+        "obs_bytes_per_shard": args.img * args.img * 4,
+    }
+    if spec is not None:
+        import numpy as np
+        out.update({
+            "grid": list(spec.grid),
+            "obs_bytes_per_shard": spec.slab_bytes(),
+            "mig_moved_total": int(np.asarray(res.diag["mig_moved"]).sum()),
+            "mig_overflow_total": int(
+                np.asarray(res.diag["mig_overflow"]).sum()),
+        })
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -22,6 +22,9 @@ SUITES = {
     "roofline": ("benchmarks.roofline_table", "dry-run roofline table"),
     "bank": ("benchmarks.bank_bench",
              "FilterBank/DRA throughput baseline (BENCH_bank.json)"),
+    "domain": ("benchmarks.bench_domain",
+               "domain decomposition vs replicated frames "
+               "(BENCH_domain.json)"),
 }
 
 

@@ -20,7 +20,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def run_worker(devices: int, dra: str, particles: int, *, scheduler="lgs",
-               exchange_ratio=0.10, frames=10, img=128, repeats=2) -> dict:
+               exchange_ratio=0.10, frames=10, img=128, repeats=2,
+               domain=False, k_cap=0) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.pop("XLA_FLAGS", None)
@@ -30,6 +31,8 @@ def run_worker(devices: int, dra: str, particles: int, *, scheduler="lgs",
            "--exchange-ratio", str(exchange_ratio),
            "--particles", str(particles), "--frames", str(frames),
            "--img", str(img), "--repeats", str(repeats)]
+    if domain:
+        cmd += ["--domain", "--k-cap", str(k_cap)]
     out = subprocess.run(cmd, capture_output=True, text=True, env=env,
                          timeout=1200)
     if out.returncode != 0:

@@ -1,11 +1,13 @@
 """PPF core: particle ensembles, resampling, DLB scheduling, compression,
-distributed resampling algorithms, and SIR/ASIR drivers."""
+distributed resampling algorithms, domain decomposition, and SIR/ASIR
+drivers."""
 from repro.core.particles import (ParticleEnsemble, advance,
                                   effective_sample_size, init_ensemble,
                                   log_sum_weights, logical_size, materialize,
-                                  normalized_weights, resample,
+                                  normalized_weights, permute, resample,
                                   resample_compressed, reweight,
                                   weighted_mean)
+from repro.core.domain import DomainSpec
 from repro.core.smc import (SIRCarry, SIRConfig, StateSpaceModel,
                             ess_resample, make_sir_step, run_sir)
 from repro.core.distributed import DRAConfig
@@ -14,8 +16,8 @@ from repro.core.filters import FilterBank, FilterResult, ParallelParticleFilter
 __all__ = [
     "ParticleEnsemble", "advance", "effective_sample_size", "init_ensemble",
     "log_sum_weights", "logical_size", "materialize", "normalized_weights",
-    "resample", "resample_compressed", "reweight", "weighted_mean",
-    "SIRCarry", "SIRConfig", "StateSpaceModel", "ess_resample",
+    "permute", "resample", "resample_compressed", "reweight", "weighted_mean",
+    "DomainSpec", "SIRCarry", "SIRConfig", "StateSpaceModel", "ess_resample",
     "make_sir_step", "run_sir", "DRAConfig", "FilterBank", "FilterResult",
     "ParallelParticleFilter",
 ]

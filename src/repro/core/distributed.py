@@ -256,11 +256,8 @@ def _ring_exchange(state: Any, log_weights: Array, m_buf: int, m_valid: Array,
 def _permute_ensemble(key: Array, ensemble: ParticleEnsemble) -> ParticleEnsemble:
     """Randomize slot order (systematic ancestors are sorted, so the ring
     head would otherwise always ship the lowest-index ancestors)."""
-    order = jax.random.permutation(key, ensemble.capacity)
-    state = jax.tree_util.tree_map(lambda x: x[order], ensemble.state)
-    return ensemble.replace(state=state,
-                            log_weights=ensemble.log_weights[order],
-                            counts=ensemble.counts[order])
+    return particles.permute(ensemble,
+                             jax.random.permutation(key, ensemble.capacity))
 
 
 def rna_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,

@@ -151,34 +151,44 @@ def proportional_allocation(shard_log_weights: Array, total: int, cap: int,
 # Routing executor: compressed particles over one fused all_to_all
 # ---------------------------------------------------------------------------
 
+class PackResult(NamedTuple):
+    """One shard's outbound windows, before any collective (pure)."""
+    kept_counts: Array          # (C,)      multiplicities staying local
+    send_state: Any             # (P, K, ...) outbound unique particles
+    send_counts: Array          # (P, K)    outbound multiplicities
+    send_log_weights: Array     # (P, K)    outbound per-replica log-weights
+    send_slots: Array           # (P, K)    local slot of each window entry
+    overflow_units: Array       # ()        units that could not be packed
+
+
 class RouteResult(NamedTuple):
     kept_counts: Array          # (C,)      multiplicities staying local
     recv_state: Any             # (P, K, ...) received unique particles
     recv_counts: Array          # (P, K)    received multiplicities
     recv_log_weights: Array     # (P, K)    received per-replica log-weights
     overflow_units: Array       # ()        units that could not be packed
+    send_slots: Array           # (P, K)    local slot of each outbound entry
+    send_units: Array           # (P, K)    units shipped per outbound entry
 
 
 def _window_overlap(u_lo: Array, u_hi: Array, a: Array, b: Array) -> Array:
     return jnp.maximum(jnp.minimum(u_hi, b) - jnp.maximum(u_lo, a), 0)
 
 
-def route_compressed(ensemble: ParticleEnsemble, row_send: Array, *,
-                     k_cap: int, axis_name: str) -> RouteResult:
-    """Execute one shard's row of the schedule inside ``shard_map``.
+def pack_windows(ensemble: ParticleEnsemble, row_send: Array, *,
+                 k_cap: int) -> PackResult:
+    """Pack one shard's outbound destination windows (pure, no
+    collectives — ``route_compressed`` adds the ``all_to_all``; the
+    domain-migration tests emulate a whole mesh by vmapping this).
 
     ensemble: the shard's *compressed* ensemble (DESIGN.md §9) — pytree of
               (C, ...) unique-particle states, (C,) per-replica
               log-weights, (C,) int32 multiplicities
     row_send: (P,) int32 units this shard sends to each peer
-
-    The real per-replica log-weights travel with the particles — receivers
-    see exactly the weight each shipped unit carried on its sender.
     """
     state = ensemble.state
     log_weights = ensemble.log_weights
     c = ensemble.counts.shape[0]
-    p = row_send.shape[0]
     counts = ensemble.counts.astype(jnp.int32)
     # Unit line over local particles: particle k owns [u_lo_k, u_hi_k).
     u_hi = jnp.cumsum(counts)
@@ -193,8 +203,13 @@ def route_compressed(ensemble: ParticleEnsemble, row_send: Array, *,
     def pack_one(a, b):
         # first particle overlapping [a, b)
         k0 = jnp.searchsorted(u_hi, a, side="right")
-        idx = jnp.minimum(k0 + jnp.arange(k_cap), c - 1)
+        raw = k0 + jnp.arange(k_cap)
+        idx = jnp.minimum(raw, c - 1)
         sent = _window_overlap(u_lo[idx], u_hi[idx], a, b).astype(jnp.int32)
+        # entries clipped to c-1 are padding, not repeats of the last slot:
+        # without the mask a window running past the last slot would count
+        # (and ship) that slot once per padding entry
+        sent = jnp.where(raw < c, sent, 0)
         return idx.astype(jnp.int32), sent
 
     idxs, sent = jax.vmap(pack_one)(d_lo, d_hi)          # (P, K), (P, K)
@@ -208,14 +223,27 @@ def route_compressed(ensemble: ParticleEnsemble, row_send: Array, *,
     shipped_per_particle = jnp.zeros((c,), jnp.int32).at[idxs.reshape(-1)].add(
         sent.reshape(-1))
     kept_counts = counts - shipped_per_particle
+    return PackResult(kept_counts, send_state, sent, send_lw, idxs,
+                      overflow_units=overflow)
 
+
+def route_compressed(ensemble: ParticleEnsemble, row_send: Array, *,
+                     k_cap: int, axis_name: str) -> RouteResult:
+    """Execute one shard's row of the schedule inside ``shard_map``.
+
+    The real per-replica log-weights travel with the particles — receivers
+    see exactly the weight each shipped unit carried on its sender.
+    """
+    pack = pack_windows(ensemble, row_send, k_cap=k_cap)
     a2a = functools.partial(runtime.all_to_all, axis_name=axis_name,
                             split_axis=0, concat_axis=0, tiled=False)
-    recv_state = jax.tree_util.tree_map(a2a, send_state)
-    recv_counts = a2a(sent)
-    recv_lw = a2a(send_lw)
-    return RouteResult(kept_counts, recv_state, recv_counts, recv_lw,
-                       overflow_units=overflow)
+    recv_state = jax.tree_util.tree_map(a2a, pack.send_state)
+    recv_counts = a2a(pack.send_counts)
+    recv_lw = a2a(pack.send_log_weights)
+    return RouteResult(pack.kept_counts, recv_state, recv_counts, recv_lw,
+                       overflow_units=pack.overflow_units,
+                       send_slots=pack.send_slots,
+                       send_units=pack.send_counts)
 
 
 def merge_routed(ensemble: ParticleEnsemble,

@@ -1,0 +1,341 @@
+"""Input-space domain decomposition for image-observation filters.
+
+The PPF paper names *input-space domain decomposition* as one of its core
+algorithmic improvements: each process owns a tile of the frame and only
+the particles inside it, so no node ever has to hold (or receive) the
+whole observation.  This module is that subsystem for the jax_pallas
+reproduction (DESIGN.md §10):
+
+* ``DomainSpec`` maps a ``P``-shard mesh axis onto a 2-D tile grid over
+  the frame and carries the halo width (= the likelihood patch radius).
+* ``owner_of`` computes per-particle tile ownership **from the clipped,
+  rounded patch-center pixel** — the same clamp the likelihood applies —
+  so every particle owned by a tile has its *entire* patch inside that
+  tile's halo slab and tile-local evaluation is exact (DESIGN.md §10.2).
+* ``migration_plan`` + ``migrate`` move out-of-domain particles to their
+  owning shard by reusing the compressed-routing primitives of
+  ``repro.core.dlb`` (``route_compressed``/``merge_routed``) with an
+  ownership-derived schedule instead of a load-balancing one — the reuse
+  Demirel et al.'s adaptive-distributed-resampling companion paper
+  (PAPERS.md) points at.
+* ``exchange_log_likelihood`` is the migrate-after-advance hook used by
+  ``repro.core.smc.make_distributed_sir_step``: particles travel to
+  their owner, are reweighted against the owner's halo slab, and the
+  log-likelihoods travel back to the particles' *home slots*.  Slot
+  identity (and therefore every PRNG draw and resampling decision) stays
+  with the home shard, which is what makes the domain-decomposed filter
+  reproduce the replicated-frame filter's trajectories exactly
+  (DESIGN.md §10.3).
+
+Inter-shard exchange stays sparse and structured — one fused
+``all_to_all`` of fixed windows out, one scalar ``all_to_all`` back —
+following Heine et al.'s butterfly-interactions argument (PAPERS.md)
+that unstructured global shuffles are the scalability killer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dlb
+from repro.core import particles
+from repro.core import runtime
+from repro.core.particles import ParticleEnsemble
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DomainSpec:
+    """Tile grid ↔ mesh-axis mapping for one (H, W) frame (DESIGN.md §10.1).
+
+    Attributes:
+      frame_shape: (H, W) of the full observation frame.
+      grid: (gy, gx) tile grid; shard ``t`` owns tile
+        ``(t // gx, t % gx)`` of the row-major grid, so ``gy * gx`` must
+        equal the mesh-axis size.  Tile extents must divide the frame.
+      halo: halo-ring width in pixels around each tile.  For patch
+        likelihoods this must equal the patch radius: ownership is
+        derived from the clipped patch center, so a halo of exactly the
+        radius makes every owned particle's patch interior to the slab.
+      k_cap: routing-window capacity (unique particles per destination
+        shard) for migration.  ``None`` means "the ensemble capacity",
+        which can never overflow — required for exact replicated-filter
+        parity.  Smaller windows trade exactness for bandwidth under the
+        overflow-residency rule (DESIGN.md §10.4).
+    """
+
+    frame_shape: tuple[int, int]
+    grid: tuple[int, int]
+    halo: int
+    k_cap: int | None = None
+
+    def __post_init__(self):
+        h, w = self.frame_shape
+        gy, gx = self.grid
+        if gy < 1 or gx < 1:
+            raise ValueError(f"grid must be positive, got {self.grid}")
+        if h % gy or w % gx:
+            raise ValueError(
+                f"grid {self.grid} does not divide frame {self.frame_shape}")
+        if self.halo < 0:
+            raise ValueError(f"halo must be >= 0, got {self.halo}")
+        if 2 * self.halo >= min(h, w):
+            raise ValueError(f"halo {self.halo} too large for frame "
+                             f"{self.frame_shape}")
+
+    # -- static geometry ---------------------------------------------------
+    @property
+    def tiles(self) -> int:
+        return self.grid[0] * self.grid[1]
+
+    @property
+    def tile_shape(self) -> tuple[int, int]:
+        return (self.frame_shape[0] // self.grid[0],
+                self.frame_shape[1] // self.grid[1])
+
+    @property
+    def slab_shape(self) -> tuple[int, int]:
+        th, tw = self.tile_shape
+        return (th + 2 * self.halo, tw + 2 * self.halo)
+
+    def frame_bytes(self, dtype_bytes: int = 4) -> int:
+        h, w = self.frame_shape
+        return h * w * dtype_bytes
+
+    def slab_bytes(self, dtype_bytes: int = 4) -> int:
+        sh, sw = self.slab_shape
+        return sh * sw * dtype_bytes
+
+    @classmethod
+    def for_mesh(cls, frame_shape: tuple[int, int], tiles: int, halo: int,
+                 *, k_cap: int | None = None) -> "DomainSpec":
+        """Pick the most-square (gy, gx) factorization of ``tiles`` whose
+        tile extents divide the frame — squarest tiles minimize the halo
+        perimeter and therefore the replicated slab bytes."""
+        h, w = frame_shape
+        best: tuple[int, int, int] | None = None
+        for gy in range(1, tiles + 1):
+            if tiles % gy:
+                continue
+            gx = tiles // gy
+            if h % gy or w % gx:
+                continue
+            score = abs(h // gy - w // gx)
+            if best is None or score < best[0]:
+                best = (score, gy, gx)
+        if best is None:
+            raise ValueError(
+                f"no (gy, gx) factorization of {tiles} tiles divides a "
+                f"{frame_shape} frame")
+        return cls(frame_shape=(h, w), grid=(best[1], best[2]), halo=halo,
+                   k_cap=k_cap)
+
+    # -- per-tile geometry (``t`` may be a traced axis index) --------------
+    def tile_origin(self, t: Array | int) -> tuple[Array, Array]:
+        """(y0, x0) of tile ``t``'s owned region in frame coordinates."""
+        gy, gx = self.grid
+        th, tw = self.tile_shape
+        return (t // gx) * th, (t % gx) * tw
+
+    def slab_origin(self, t: Array | int) -> tuple[Array, Array]:
+        """Frame coordinates of the slab's [0, 0] pixel (may be negative:
+        at frame edges the halo ring hangs over the border and is
+        zero-filled — those pixels are never read, see ``owner_of``)."""
+        y0, x0 = self.tile_origin(t)
+        return y0 - self.halo, x0 - self.halo
+
+
+# ---------------------------------------------------------------------------
+# Ownership (the partition of particles over shards)
+# ---------------------------------------------------------------------------
+
+def owner_of(spec: DomainSpec, y: Array, x: Array) -> Array:
+    """Owning shard of each (y, x) position (DESIGN.md §10.2).
+
+    Ownership is derived from the **clipped rounded patch-center pixel**
+    — ``clip(round(·), halo, dim-1-halo)`` — i.e. exactly the center the
+    patch likelihood evaluates.  Consequences, both load-bearing:
+
+    * the tiles partition positions: every position maps to exactly one
+      shard (the center pixel lies in exactly one tile);
+    * the owner's halo slab contains the particle's *entire* patch, so
+      tile-local evaluation needs no further clamping and is exact.
+    """
+    h, w = spec.frame_shape
+    th, tw = spec.tile_shape
+    gx = spec.grid[1]
+    r = spec.halo
+    cy = jnp.clip(jnp.round(y).astype(jnp.int32), r, h - 1 - r)
+    cx = jnp.clip(jnp.round(x).astype(jnp.int32), r, w - 1 - r)
+    return (cy // th) * gx + (cx // tw)
+
+
+# ---------------------------------------------------------------------------
+# Halo slabs (per-shard observation pieces)
+# ---------------------------------------------------------------------------
+
+def extract_slab(spec: DomainSpec, frame: Array, t: Array | int) -> Array:
+    """Tile ``t``'s halo slab: the owned tile plus a ``halo``-wide ring,
+    zero-filled where the ring hangs over the frame border."""
+    padded = jnp.pad(frame, spec.halo)
+    y0, x0 = spec.tile_origin(t)
+    return jax.lax.dynamic_slice(padded, (y0, x0), spec.slab_shape)
+
+
+def tile_frames(spec: DomainSpec, frames: Array) -> Array:
+    """Tile-shard a (K, H, W) frame stack into (K, P, sh, sw) halo slabs.
+
+    This is the array the domain-decomposed filter shards over the mesh
+    axis (dim 1), so each device holds only its own slabs — the per-shard
+    observation memory drops to ~1/P of the frame plus the halo ring.
+    """
+    if frames.ndim != 3 or frames.shape[1:] != spec.frame_shape:
+        raise ValueError(f"expected (K,) + {spec.frame_shape} frames, got "
+                         f"{frames.shape}")
+    padded = jnp.pad(frames, ((0, 0), (spec.halo, spec.halo),
+                              (spec.halo, spec.halo)))
+    sh, sw = spec.slab_shape
+    slabs = []
+    for t in range(spec.tiles):
+        y0, x0 = spec.tile_origin(t)
+        slabs.append(padded[:, y0:y0 + sh, x0:x0 + sw])
+    return jnp.stack(slabs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Migration: ownership-derived routing schedules over dlb's executor
+# ---------------------------------------------------------------------------
+
+class MigrationPlan(NamedTuple):
+    owner: Array       # (C,) owning shard per slot (dead slots pinned home)
+    order: Array       # (C,) permutation: home layout -> routing layout
+    row_send: Array    # (P,) units this shard ships to each peer
+
+
+def migration_plan(spec: DomainSpec, ensemble: ParticleEnsemble, yx: Array,
+                   my: Array | int) -> MigrationPlan:
+    """Ownership-derived routing schedule for one shard (pure, no
+    collectives).
+
+    Unlike the DLB schedulers — which balance *counts* and may ship any
+    particle anywhere — the migration schedule is dictated by geometry:
+    slot ``i`` must reach ``owner[i]``.  ``route_compressed`` packs
+    destination windows from *contiguous* unit-line ranges, so the plan
+    stably sorts slots to (self-owned first, then peers by index), after
+    which each destination's range is exactly its owned particles.  Dead
+    slots (−inf weight / zero count) are pinned to the home shard so they
+    never waste window capacity.
+    """
+    owner = owner_of(spec, yx[..., 0], yx[..., 1])
+    live = jnp.isfinite(ensemble.log_weights) & (ensemble.counts > 0)
+    owner = jnp.where(live, owner, my)
+    order = jnp.argsort(jnp.where(owner == my, -1, owner), stable=True)
+    counts = jnp.where(live, ensemble.counts, 0).astype(jnp.int32)
+    row_send = jnp.zeros((spec.tiles,), jnp.int32).at[owner].add(
+        jnp.where(owner == my, 0, counts))
+    return MigrationPlan(owner, order, row_send)
+
+
+def _migrate_route(spec: DomainSpec, ensemble: ParticleEnsemble, yx: Array,
+                   *, axis_name: str):
+    """Shared plan→permute→route→merge sequence behind ``migrate`` and
+    ``exchange_log_likelihood``: one fused ``all_to_all`` of
+    (state, count, per-replica log-weight) windows, ownership-scheduled."""
+    my = runtime.axis_index(axis_name)
+    plan = migration_plan(spec, ensemble, yx, my)
+    perm = particles.permute(ensemble, plan.order)
+    k_cap = spec.k_cap or ensemble.capacity
+    route = dlb.route_compressed(perm, plan.row_send, k_cap=k_cap,
+                                 axis_name=axis_name)
+    merged = dlb.merge_routed(perm, route)
+    # mig_moved counts units that actually shipped — the scheduled volume
+    # minus the overflow residue that stayed local (DESIGN.md §10.4)
+    diag = {
+        "mig_moved": runtime.psum(
+            jnp.sum(plan.row_send) - route.overflow_units, axis_name),
+        "mig_overflow": runtime.psum(route.overflow_units, axis_name),
+    }
+    return plan, route, merged, diag
+
+
+def migrate(spec: DomainSpec, ensemble: ParticleEnsemble, yx: Array, *,
+            axis_name: str) -> tuple[ParticleEnsemble, dict]:
+    """Move out-of-domain particles to their owning shard (residency
+    transfer, paper §V routing reused with an ownership schedule).
+
+    Returns the *compressed* post-migration ensemble (capacity
+    ``C + P·K``; expand with ``particles.materialize`` once a target
+    capacity is chosen — domain residency is deliberately allowed to be
+    imbalanced, cf. non-proportional allocation in PAPERS.md) plus
+    routing diagnostics.  Units that exceed a destination window stay
+    resident on the sender (the overflow-residency rule, DESIGN.md
+    §10.4); conservation of logical size and per-replica log-weights
+    holds either way (`tests/test_domain.py` pins both properties on the
+    emulated mesh via the shared ``pack_windows``/``merge_routed`` path,
+    and the residency API itself runs under ``shard_map`` in
+    ``test_domain_filter_matches_replicated_on_1device_mesh``).
+    """
+    _, _, merged, diag = _migrate_route(spec, ensemble, yx,
+                                        axis_name=axis_name)
+    return merged, diag
+
+
+def scatter_returned_ll(ll_local: Array, ll_back: Array, send_slots: Array,
+                        send_units: Array, order: Array) -> Array:
+    """Recombine locally- and remotely-computed log-likelihoods (pure).
+
+    ll_local: (C,) likelihoods of the routing-layout slots against the
+        *local* slab — exact for self-owned slots, clamped-approximate
+        for overflow residents, garbage (unused) for shipped/dead slots.
+    ll_back:  (P, K) likelihoods for this shard's outbound windows,
+        computed by the owners (row j = my window to shard j).
+    send_slots/send_units: (P, K) outbound window packing (each live slot
+        appears in at most one window entry — its owner is unique).
+    order: the migration-plan permutation, undone on return.
+    """
+    c = ll_local.shape[0]
+    slots = send_slots.reshape(-1)
+    sent = send_units.reshape(-1)
+    shipped = jnp.zeros((c,), jnp.int32).at[slots].add(sent)
+    remote = jnp.zeros((c,), ll_local.dtype).at[slots].add(
+        jnp.where(sent > 0, ll_back.reshape(-1), 0.0))
+    ll = jnp.where(shipped > 0, remote, ll_local)
+    return ll[jnp.argsort(order)]
+
+
+def exchange_log_likelihood(
+        spec: DomainSpec, ensemble: ParticleEnsemble, yx: Array,
+        tile_ll_fn: Callable[[Any], Array], *,
+        axis_name: str) -> tuple[Array, dict]:
+    """The migrate-after-advance hook (DESIGN.md §10.3).
+
+    Particles migrate to their tile owners (ownership-scheduled
+    ``route_compressed`` + ``merge_routed``), every shard evaluates
+    ``tile_ll_fn`` — the tile-local likelihood against its own halo slab
+    — over its merged (kept + received) slots, and the computed
+    log-likelihoods travel back to the senders' home slots with one
+    scalar ``all_to_all``.  Slot identity never moves, so the caller's
+    reweight/resample stream is untouched: the domain-decomposed filter
+    reproduces the replicated-frame filter exactly (golden-pinned).
+
+    Returns ((C,) per-home-slot log-likelihoods, diagnostics).
+    """
+    c = ensemble.capacity
+    p = spec.tiles
+    plan, route, merged, diag = _migrate_route(spec, ensemble, yx,
+                                               axis_name=axis_name)
+
+    ll_all = tile_ll_fn(merged.state)                 # (C + P·K,)
+    ll_local = ll_all[:c]
+    ll_recv = ll_all[c:].reshape(p, -1)
+    # return trip: row j of the result is my window to shard j, evaluated
+    # by shard j (all_to_all transposes the (sender, window) layout back)
+    ll_back = runtime.all_to_all(ll_recv, axis_name, split_axis=0,
+                                 concat_axis=0, tiled=False)
+    ll = scatter_returned_ll(ll_local, ll_back, route.send_slots,
+                             route.send_units, plan.order)
+    return ll, diag

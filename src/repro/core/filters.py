@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import distributed as dist
+from repro.core import domain as domain_mod
 from repro.core import particles
 from repro.core import runtime
 from repro.core import smc
@@ -42,6 +43,16 @@ class ParallelParticleFilter:
 
     With ``mesh=None`` (or a 1-device mesh) runs the single-device reference
     path; otherwise runs the configured DRA over ``axis_name``.
+
+    ``domain`` switches the observation plumbing to input-space domain
+    decomposition (DESIGN.md §10): the frame stack is tile-sharded into
+    halo slabs over ``axis_name`` — each device holds ~1/P of every frame
+    plus a halo ring — and the SIR step reweights through the
+    migrate-after-advance hook.  The trajectories are exactly those of
+    the replicated-frame filter (golden-pinned); only the observation
+    memory/compute placement changes.  ``observations`` may be either the
+    full (K, H, W) frames (tiled here) or a pre-tiled (K, P, sh, sw)
+    stack from ``repro.data.synthetic_movie.tile_shard_frames``.
     """
 
     model: smc.StateSpaceModel
@@ -49,9 +60,15 @@ class ParallelParticleFilter:
     dra: dist.DRAConfig = dataclasses.field(default_factory=dist.DRAConfig)
     mesh: Mesh | None = None
     axis_name: str = "data"
+    domain: domain_mod.DomainSpec | None = None
 
     def run(self, key: Array, observations: Any) -> FilterResult:
-        if self.mesh is None or self.mesh.devices.size == 1:
+        if self.domain is not None and self.mesh is None:
+            raise ValueError("domain decomposition needs a mesh: the tile "
+                             "grid maps onto a mesh axis (pass mesh=, or "
+                             "drop domain= for the single-device path)")
+        if self.mesh is None or (self.mesh.devices.size == 1
+                                 and self.domain is None):
             return self._run_local(key, observations)
         return self._run_sharded(key, observations)
 
@@ -67,10 +84,22 @@ class ParallelParticleFilter:
         p = mesh.shape[self.axis_name]
         n = self.sir.n_particles
         c = _shard_capacity(n, p)
+        dom = self.domain
+        if dom is not None:
+            if dom.tiles != p:
+                raise ValueError(f"domain grid {dom.grid} has {dom.tiles} "
+                                 f"tiles but mesh axis {self.axis_name!r} "
+                                 f"has {p} shards")
+            observations = _tiled_observations(dom, observations)
+            obs_spec = P(None, self.axis_name)   # (K, P, sh, sw) slabs
+        else:
+            obs_spec = P()                       # frames replicated
         step = smc.make_distributed_sir_step(self.model, self.sir, self.dra,
-                                             self.axis_name)
+                                             self.axis_name, domain=dom)
 
         def shard_fn(key, obs):
+            if dom is not None:
+                obs = jax.tree_util.tree_map(lambda x: x[:, 0], obs)
             carry, outs = jax.lax.scan(
                 step, _shard_carry(key, self.model, self.axis_name, c, n),
                 obs)
@@ -80,7 +109,7 @@ class ParallelParticleFilter:
         fn = runtime.shard_map(
             shard_fn,
             mesh,
-            in_specs=(P(), P()),              # key + observations replicated
+            in_specs=(P(), obs_spec),
             out_specs=(
                 smc.StepOutput(estimate=P(), ess=P(), log_marginal=P(),
                                resampled=P(), diag=P()),
@@ -181,6 +210,19 @@ class FilterBank:
         outs, final = jax.jit(fn)(keys, observations)
         return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
                             outs.resampled, outs.diag, final)
+
+
+def _tiled_observations(dom: domain_mod.DomainSpec, observations: Any):
+    """Accept full frames (tiled here) or an already tile-sharded stack."""
+    obs = jnp.asarray(observations)
+    if obs.ndim == 3 and obs.shape[1:] == dom.frame_shape:
+        return domain_mod.tile_frames(dom, obs)
+    if obs.ndim == 4 and obs.shape[1] == dom.tiles \
+            and obs.shape[2:] == dom.slab_shape:
+        return obs
+    raise ValueError(
+        f"domain observations must be (K,) + {dom.frame_shape} frames or "
+        f"(K, {dom.tiles}) + {dom.slab_shape} slabs, got {obs.shape}")
 
 
 def _shard_capacity(n: int, p: int) -> int:

@@ -155,6 +155,20 @@ def reweight(ensemble: ParticleEnsemble, log_lik: Array) -> ParticleEnsemble:
         log_weights=jnp.where(jnp.isfinite(lw), lw + log_lik, -jnp.inf))
 
 
+def permute(ensemble: ParticleEnsemble, order: Array) -> ParticleEnsemble:
+    """Reorder slots by ``order`` (a permutation of ``arange(capacity)``).
+
+    Pure relabeling: every observational statistic (§9 rule 3) is
+    invariant.  Used by RNA's travel randomization and by domain
+    migration, whose routing windows require destination-contiguous
+    slot order (``repro.core.domain.migration_plan``).
+    """
+    state = jax.tree_util.tree_map(lambda x: x[order], ensemble.state)
+    return ParticleEnsemble(state=state,
+                            log_weights=ensemble.log_weights[order],
+                            counts=ensemble.counts[order])
+
+
 def resample_compressed(key: Array, ensemble: ParticleEnsemble,
                         n_out: Array | int, *, scheme: str = "systematic",
                         capacity: int | None = None,

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import distributed as dist
+from repro.core import domain as domain_mod
 from repro.core import particles
 from repro.core import resampling
 from repro.core import runtime
@@ -39,12 +40,24 @@ class StateSpaceModel:
     init_sampler:    (key, n) -> state pytree with leading dim n
     dynamics_sample: (key, state) -> state            (the proposal π = prior)
     log_likelihood:  (state, observation) -> (n,)     log p(z|x)
+
+    Models with spatial (image) observations may additionally provide the
+    domain-decomposition hooks (DESIGN.md §10; both required for
+    ``ParallelParticleFilter(domain=...)``):
+
+    positions:           (state) -> (n, 2) frame-coordinate (y, x)
+    tile_log_likelihood: (state, slab, (oy, ox)) -> (n,)  log p(z|x)
+        against one halo slab whose [0, 0] pixel sits at frame
+        coordinates (oy, ox); must agree exactly with ``log_likelihood``
+        for particles owned by the slab's tile.
     """
 
     init_sampler: Callable[..., Any]
     dynamics_sample: Callable[..., Any]
     log_likelihood: Callable[..., Array]
     state_dim: int = 5
+    positions: Callable[..., Array] | None = None
+    tile_log_likelihood: Callable[..., Array] | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,9 +158,24 @@ def run_sir(key: Array, model: StateSpaceModel, cfg: SIRConfig,
 # ---------------------------------------------------------------------------
 
 def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
-                              dra: dist.DRAConfig, axis_name: str = "data"):
+                              dra: dist.DRAConfig, axis_name: str = "data",
+                              domain: "domain_mod.DomainSpec | None" = None):
     """Per-shard SIR step.  ``cfg.n_particles`` is the GLOBAL count; each of
-    the P shards carries an ensemble of C = n_particles / P slots."""
+    the P shards carries an ensemble of C = n_particles / P slots.
+
+    With ``domain`` set, the observation fed to the step is this shard's
+    halo slab (not the full frame) and the reweight runs through the
+    migrate-after-advance hook (DESIGN.md §10.3): particles travel to
+    their tile owners, are reweighted tile-locally, and the
+    log-likelihoods travel back to their home slots — everything after
+    the reweight (estimate, ESS, DRA resampling) is untouched, which is
+    what keeps the domain-decomposed filter on the replicated filter's
+    exact trajectory.
+    """
+    if domain is not None and (model.tile_log_likelihood is None
+                               or model.positions is None):
+        raise ValueError("domain decomposition needs a model with "
+                         "tile_log_likelihood and positions hooks")
 
     def step(carry: SIRCarry, observation):
         key, ens = carry
@@ -157,7 +185,18 @@ def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
         key, k_dyn, k_res = jax.random.split(key, 3)
 
         ens = particles.advance(ens, k_dyn, model.dynamics_sample)
-        ll = model.log_likelihood(ens.state, observation)
+        if domain is None:
+            ll = model.log_likelihood(ens.state, observation)
+            mig_diag = {}
+        else:
+            origin = domain.slab_origin(runtime.axis_index(axis_name))
+
+            def tile_ll(state):
+                return model.tile_log_likelihood(state, observation, origin)
+
+            ll, mig_diag = domain_mod.exchange_log_likelihood(
+                domain, ens, model.positions(ens.state), tile_ll,
+                axis_name=axis_name)
         ens = particles.reweight(ens, ll)
         lw = ens.log_weights
         max_ll = jnp.max(jnp.where(jnp.isfinite(lw), ll, -jnp.inf))
@@ -191,7 +230,8 @@ def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
         ens = jax.tree_util.tree_map(
             lambda a, b: jnp.where(do_resample, a, b), r_ens, kept)
 
-        out = StepOutput(estimate, ess, glz, do_resample, diag)
+        out = StepOutput(estimate, ess, glz, do_resample,
+                         {**diag, **mig_diag})
         return SIRCarry(key, ens), out
 
     return step

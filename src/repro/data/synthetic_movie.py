@@ -63,6 +63,18 @@ def generate_movie(key: Array, cfg: TrackingConfig, n_frames: int = 50,
     return Movie(frames=clean + noise, trajectories=traj, intensities=inten)
 
 
+def tile_shard_frames(frames: Array, spec) -> Array:
+    """Emit tile-sharded frames with halo rings: (K, H, W) → (K, P, sh, sw).
+
+    ``spec`` is a ``repro.core.domain.DomainSpec``.  Dimension 1 is the
+    tile/shard axis the domain-decomposed filter shards over the mesh, so
+    each device's slice of every frame is its own tile plus the halo ring
+    — ~1/P of the frame bytes instead of a full replica (DESIGN.md §10.1).
+    """
+    from repro.core.domain import tile_frames
+    return tile_frames(spec, frames)
+
+
 def tracking_rmse(estimates: Array, trajectory: Array, warmup: int = 5) -> Array:
     """Positional RMSE in pixels vs ground truth (paper §VII.E: ~0.063 px
     on their data) after a convergence warm-up."""

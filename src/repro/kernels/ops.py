@@ -33,16 +33,20 @@ def patch_log_likelihood(y: Array, x: Array, i0: Array, image: Array, *,
                          radius: int = 4, sigma_psf: float = 1.16,
                          sigma_like: float = 2.0, i_bg: float = 0.0,
                          matched: bool = True, block_n: int = 1024,
+                         center_bounds: Array | None = None,
+                         frame_origin: Array | None = None,
                          backend: str | None = None) -> Array:
     backend = backend or default_backend()
     if backend == "xla":
         return ref.patch_log_likelihood_ref(
             y, x, i0, image, radius=radius, sigma_psf=sigma_psf,
-            sigma_like=sigma_like, i_bg=i_bg, matched=matched)
+            sigma_like=sigma_like, i_bg=i_bg, matched=matched,
+            center_bounds=center_bounds, frame_origin=frame_origin)
     return patch_log_likelihood_kernel(
         y, x, i0, image, radius=radius, sigma_psf=sigma_psf,
         sigma_like=sigma_like, i_bg=i_bg, matched=matched,
         block_n=min(block_n, y.shape[0]),
+        center_bounds=center_bounds, frame_origin=frame_origin,
         interpret=(backend == "interpret"))
 
 

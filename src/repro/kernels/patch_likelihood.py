@@ -31,16 +31,19 @@ Array = jax.Array
 DEFAULT_BLOCK_N = 1024
 
 
-def _kernel(y_ref, x_ref, i0_ref, img_ref, out_ref, *, radius: int,
-            sigma_psf: float, sigma_like: float, i_bg: float, matched: bool,
-            h: int, w: int):
+def _kernel(y_ref, x_ref, i0_ref, img_ref, geom_ref, out_ref, *,
+            radius: int, sigma_psf: float, sigma_like: float, i_bg: float,
+            matched: bool, h: int, w: int):
     y = y_ref[...]
     x = x_ref[...]
     i0 = i0_ref[...]
     img = img_ref[...]
+    # (6,) geometry: center clamp lo_y/hi_y/lo_x/hi_x + frame origin oy/ox
+    # of img[0, 0] (all frame coordinates; domain slabs, DESIGN.md §10.2)
+    g = geom_ref[...]
 
-    cy = jnp.clip(jnp.round(y).astype(jnp.int32), radius, h - 1 - radius)
-    cx = jnp.clip(jnp.round(x).astype(jnp.int32), radius, w - 1 - radius)
+    cy = jnp.clip(jnp.round(y).astype(jnp.int32), g[0], g[1])
+    cx = jnp.clip(jnp.round(x).astype(jnp.int32), g[2], g[3])
 
     inv2s2 = 0.5 / (sigma_psf * sigma_psf)
     acc = jnp.zeros_like(y)
@@ -50,7 +53,7 @@ def _kernel(y_ref, x_ref, i0_ref, img_ref, out_ref, *, radius: int,
         for dx in range(-radius, radius + 1):
             py = cy + dy
             px = cx + dx
-            z = img[py, px]
+            z = img[py - g[4], px - g[5]]
             d2 = (py.astype(y.dtype) - y) ** 2 + (px.astype(x.dtype) - x) ** 2
             model = i0 * jnp.exp(-d2 * inv2s2) + i_bg
             if matched:
@@ -70,15 +73,35 @@ def patch_log_likelihood_kernel(y: Array, x: Array, i0: Array, image: Array,
                                 sigma_like: float = 2.0, i_bg: float = 0.0,
                                 matched: bool = True,
                                 block_n: int = DEFAULT_BLOCK_N,
+                                center_bounds: Array | None = None,
+                                frame_origin: Array | None = None,
                                 interpret: bool = False) -> Array:
-    """(N,) log-likelihoods for N particles against one (H, W) frame."""
+    """(N,) log-likelihoods for N particles against one (H, W) frame.
+
+    ``center_bounds`` is an optional (4,) int32 clamp (lo_y, hi_y, lo_x,
+    hi_x) for the patch-center pixel in frame coordinates, defaulting to
+    the frame interior ``[R, dim-1-R]``; ``frame_origin`` is an optional
+    (2,) int32 frame coordinate of ``image[0, 0]``, for evaluating
+    against a halo *slab* of a larger frame (DESIGN.md §10.2 — only the
+    gather is offset; all float math stays in frame coordinates).  Both
+    ride along as one tiny vector operand so they may be traced (inside
+    ``shard_map`` the slab origin derives from the shard index).
+    """
     n = y.shape[0]
     h, w = image.shape
     assert n % block_n == 0, (n, block_n)
     grid = (n // block_n,)
+    if center_bounds is None:
+        center_bounds = jnp.asarray(
+            [radius, h - 1 - radius, radius, w - 1 - radius], jnp.int32)
+    if frame_origin is None:
+        frame_origin = jnp.zeros((2,), jnp.int32)
+    geom = jnp.concatenate([jnp.asarray(center_bounds, jnp.int32).reshape(4),
+                            jnp.asarray(frame_origin, jnp.int32).reshape(2)])
 
     vec_spec = pl.BlockSpec((block_n,), lambda i: (i,))
     img_spec = pl.BlockSpec((h, w), lambda i: (0, 0))
+    geom_spec = pl.BlockSpec((6,), lambda i: (0,))
 
     kernel = functools.partial(_kernel, radius=radius, sigma_psf=sigma_psf,
                                sigma_like=sigma_like, i_bg=i_bg,
@@ -86,8 +109,8 @@ def patch_log_likelihood_kernel(y: Array, x: Array, i0: Array, image: Array,
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[vec_spec, vec_spec, vec_spec, img_spec],
+        in_specs=[vec_spec, vec_spec, vec_spec, img_spec, geom_spec],
         out_specs=vec_spec,
         out_shape=jax.ShapeDtypeStruct((n,), y.dtype),
         interpret=interpret,
-    )(y, x, i0, image)
+    )(y, x, i0, image, geom)

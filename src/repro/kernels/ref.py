@@ -19,16 +19,26 @@ Array = jax.Array
 def patch_log_likelihood_ref(y: Array, x: Array, i0: Array, image: Array, *,
                              radius: int = 4, sigma_psf: float = 1.16,
                              sigma_like: float = 2.0, i_bg: float = 0.0,
-                             matched: bool = True) -> Array:
+                             matched: bool = True,
+                             center_bounds: Array | None = None,
+                             frame_origin: Array | None = None) -> Array:
     h, w = image.shape
+    if center_bounds is None:
+        center_bounds = jnp.asarray(
+            [radius, h - 1 - radius, radius, w - 1 - radius], jnp.int32)
+    if frame_origin is None:
+        frame_origin = jnp.zeros((2,), jnp.int32)
+    b = jnp.asarray(center_bounds, jnp.int32)
+    o = jnp.asarray(frame_origin, jnp.int32)
     r = jnp.arange(-radius, radius + 1)
     dy, dx = jnp.meshgrid(r, r, indexing="ij")
 
     def one(yy, xx, ii):
-        cy = jnp.clip(jnp.round(yy).astype(jnp.int32), radius, h - 1 - radius)
-        cx = jnp.clip(jnp.round(xx).astype(jnp.int32), radius, w - 1 - radius)
-        patch = jax.lax.dynamic_slice(image, (cy - radius, cx - radius),
-                                      (2 * radius + 1, 2 * radius + 1))
+        cy = jnp.clip(jnp.round(yy).astype(jnp.int32), b[0], b[1])
+        cx = jnp.clip(jnp.round(xx).astype(jnp.int32), b[2], b[3])
+        patch = jax.lax.dynamic_slice(
+            image, (cy - radius - o[0], cx - radius - o[1]),
+            (2 * radius + 1, 2 * radius + 1))
         py = (cy + dy).astype(yy.dtype)
         px = (cx + dx).astype(xx.dtype)
         model = ii * jnp.exp(-((py - yy) ** 2 + (px - xx) ** 2)

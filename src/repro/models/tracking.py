@@ -15,6 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.domain import DomainSpec
 from repro.core.smc import StateSpaceModel
 
 Array = jax.Array
@@ -61,22 +62,43 @@ def render_spot(yx: Array, intensity: Array, cfg: TrackingConfig,
     return intensity * jnp.exp(-d2 / (2.0 * cfg.sigma_psf ** 2))
 
 
-def patch_log_likelihood(state: Array, frame: Array, cfg: TrackingConfig) -> Array:
+def patch_log_likelihood(state: Array, frame: Array, cfg: TrackingConfig, *,
+                         center_bounds: tuple | None = None,
+                         frame_origin: tuple | None = None) -> Array:
     """Log-likelihood (paper Eq. 4) for a batch of particles against one
     frame, each evaluated on its own ±R patch.  Pure-jnp reference; the
     Pallas kernel in ``repro.kernels.patch_likelihood`` accelerates this.
 
     state: (N, 5) [y, x, vy, vx, I0];  frame: (H, W).
+
+    The two keyword extras are the domain-decomposition hooks
+    (DESIGN.md §10.2); ``frame`` may then be a halo *slab* of the full
+    frame rather than the frame itself:
+
+    center_bounds: (lo_y, hi_y, lo_x, hi_x) clamp for the patch-center
+        pixel in FRAME coordinates, overriding the default frame interior
+        ``[R, dim-1-R]``.
+    frame_origin: frame coordinates (oy, ox) of ``frame[0, 0]``.  Only
+        the integer patch *gather* is offset by the origin — positions,
+        centers, and the PSF model all stay in frame coordinates, so a
+        slab evaluation is bit-identical to the full-frame one (a
+        coordinate rebase would round: float32 ``y - oy`` loses a ulp
+        when it crosses a binade).
     """
     r = cfg.patch_radius
     dy, dx = psf_patch_offsets(r)                       # (2R+1, 2R+1)
     h, w = frame.shape
+    if center_bounds is None:
+        lo_y, hi_y, lo_x, hi_x = r, h - 1 - r, r, w - 1 - r
+    else:
+        lo_y, hi_y, lo_x, hi_x = center_bounds
+    oy, ox = (0, 0) if frame_origin is None else frame_origin
 
     def one(s):
         y, x, i0 = s[0], s[1], s[4]
-        cy = jnp.clip(jnp.round(y).astype(jnp.int32), r, h - 1 - r)
-        cx = jnp.clip(jnp.round(x).astype(jnp.int32), r, w - 1 - r)
-        patch = jax.lax.dynamic_slice(frame, (cy - r, cx - r),
+        cy = jnp.clip(jnp.round(y).astype(jnp.int32), lo_y, hi_y)
+        cx = jnp.clip(jnp.round(x).astype(jnp.int32), lo_x, hi_x)
+        patch = jax.lax.dynamic_slice(frame, (cy - r - oy, cx - r - ox),
                                       (2 * r + 1, 2 * r + 1))
         py = cy + dy
         px = cx + dx
@@ -90,6 +112,39 @@ def patch_log_likelihood(state: Array, frame: Array, cfg: TrackingConfig) -> Arr
             cfg.sigma_like ** 2)
 
     return jax.vmap(one)(state)
+
+
+def tile_patch_log_likelihood(state: Array, slab: Array, origin_yx,
+                              cfg: TrackingConfig) -> Array:
+    """Tile-local likelihood against one halo slab (DESIGN.md §10.2).
+
+    ``slab`` is the ``(tile_h + 2R, tile_w + 2R)`` halo slab whose
+    ``[0, 0]`` pixel sits at frame coordinates ``origin_yx`` (integers,
+    possibly negative at frame edges).  All float arithmetic stays in
+    frame coordinates (see ``patch_log_likelihood``); the patch-center
+    clamp is the frame interior intersected with "the patch fits in the
+    slab".  For particles owned by the slab's tile
+    (``repro.core.domain.owner_of``) the slab constraint is a no-op —
+    ownership derives from the clipped center, so every owned particle is
+    interior to its slab — and the result is bitwise the full-frame
+    ``patch_log_likelihood``.
+    """
+    oy, ox = origin_yx
+    h, w = cfg.img_size
+    r = cfg.patch_radius
+    sh, sw = slab.shape
+    bounds = (jnp.maximum(r, oy + r), jnp.minimum(h - 1 - r, oy + sh - 1 - r),
+              jnp.maximum(r, ox + r), jnp.minimum(w - 1 - r, ox + sw - 1 - r))
+    return patch_log_likelihood(state, slab, cfg, center_bounds=bounds,
+                                frame_origin=origin_yx)
+
+
+def make_domain_spec(cfg: TrackingConfig, tiles: int, *,
+                     k_cap: int | None = None) -> DomainSpec:
+    """Domain decomposition for this imaging model: halo = patch radius,
+    squarest tile grid that divides the frame (DESIGN.md §10.1)."""
+    return DomainSpec.for_mesh(cfg.img_size, tiles, cfg.patch_radius,
+                               k_cap=k_cap)
 
 
 def make_tracking_model(cfg: TrackingConfig) -> StateSpaceModel:
@@ -115,7 +170,12 @@ def make_tracking_model(cfg: TrackingConfig) -> StateSpaceModel:
     def log_likelihood(state: Array, frame: Array) -> Array:
         return patch_log_likelihood(state, frame, cfg)
 
+    def tile_log_likelihood(state: Array, slab: Array, origin_yx) -> Array:
+        return tile_patch_log_likelihood(state, slab, origin_yx, cfg)
+
     return StateSpaceModel(init_sampler=init_sampler,
                            dynamics_sample=dynamics_sample,
                            log_likelihood=log_likelihood,
-                           state_dim=5)
+                           state_dim=5,
+                           positions=lambda state: state[:, 0:2],
+                           tile_log_likelihood=tile_log_likelihood)

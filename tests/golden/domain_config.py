@@ -1,0 +1,27 @@
+"""The single source of the domain-parity golden configuration.
+
+Shared (as plain data — no jax imports, no side effects) by
+``tests/golden/generate_parity.py`` which records the replicated-frame
+reference trajectories, and ``tests/workers/distributed_checks.py``
+which re-runs the same configs replicated AND domain-decomposed on the
+real 8-shard mesh.  Keeping them byte-identical here is what makes
+``tests/test_distributed.py::test_domain_matches_golden`` a config-safe
+pin: edit this dict and regenerate the goldens together, deliberately.
+
+The movie seed/length are chosen so the true spot crosses a tile
+boundary of the (2, 4) grid (``tiles_visited >= 2`` is asserted).
+"""
+
+DOMAIN_PARITY = {
+    "img": 48,
+    "patch_radius": 4,      # == halo width of the domain spec
+    "v_init": 1.5,
+    "n_frames": 10,
+    "movie_seed": 0,
+    "run_seed": 1,
+    "tiles": 8,
+    "n_particles": 1024,
+    "ess_frac": 0.5,
+    "dras": [("rna", {"exchange_ratio": 0.25}),
+             ("rpa", {"scheduler": "lgs"})],
+}

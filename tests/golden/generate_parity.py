@@ -24,10 +24,12 @@ import jax.numpy as jnp        # noqa: E402
 import numpy as np             # noqa: E402
 
 from repro.core import SIRConfig, ParallelParticleFilter   # noqa: E402
+from repro.core import domain as domain_mod                # noqa: E402
 from repro.core.distributed import DRAConfig               # noqa: E402
 from repro.core.smc import StateSpaceModel, run_sir        # noqa: E402
 from repro.launch.mesh import make_host_mesh               # noqa: E402
 from repro.models.tracking import (TrackingConfig,         # noqa: E402
+                                   make_domain_spec,
                                    make_tracking_model)
 from repro.data.synthetic_movie import generate_movie      # noqa: E402
 
@@ -89,10 +91,48 @@ def dra_golden() -> dict:
     return out
 
 
+def domain_golden() -> dict:
+    """Replicated-frame reference trajectories for the domain-decomposition
+    parity configs (DESIGN.md §10.3): the domain-decomposed filter on the
+    8-shard mesh must reproduce these within 1e-5
+    (tests/test_distributed.py::test_domain_matches_golden).  The exact
+    configuration is single-sourced in domain_config.DOMAIN_PARITY,
+    shared with the worker that re-runs it; ``tiles_visited`` records how
+    many distinct owner tiles the true trajectory touches, asserted ≥ 2
+    so the pin can't go vacuous."""
+    from domain_config import DOMAIN_PARITY as dp   # sibling module
+
+    cfg = TrackingConfig(img_size=(dp["img"], dp["img"]),
+                         v_init=dp["v_init"],
+                         patch_radius=dp["patch_radius"])
+    model = make_tracking_model(cfg)
+    movie = generate_movie(jax.random.key(dp["movie_seed"]), cfg,
+                           n_frames=dp["n_frames"])
+    spec = make_domain_spec(cfg, dp["tiles"])
+    owners = np.asarray(domain_mod.owner_of(spec,
+                                            movie.trajectories[:, 0, 0],
+                                            movie.trajectories[:, 0, 1]))
+    mesh = make_host_mesh(dp["tiles"])
+    out = {"tiles_visited": len(set(owners.tolist())), "grid": list(spec.grid)}
+    for kind, extra in dp["dras"]:
+        pf = ParallelParticleFilter(
+            model=model, sir=SIRConfig(n_particles=dp["n_particles"],
+                                       ess_frac=dp["ess_frac"]),
+            dra=DRAConfig(kind=kind, **extra), mesh=mesh)
+        res = pf.run(jax.random.key(dp["run_seed"]), movie.frames)
+        out[kind] = {
+            "estimates": np.asarray(res.estimates).tolist(),
+            "ess": np.asarray(res.ess).tolist(),
+            "log_marginal": np.asarray(res.log_marginal).tolist(),
+        }
+    return out
+
+
 if __name__ == "__main__":
     dest = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "sir_parity.json")
-    data = {"sir": sir_golden(), "dra": dra_golden()}
+    data = {"sir": sir_golden(), "dra": dra_golden(),
+            "domain": domain_golden()}
     with open(dest, "w") as f:
         json.dump(data, f)
     print(f"wrote {dest}", file=sys.stderr)

@@ -1,0 +1,438 @@
+"""Domain-decomposition property + parity suite (DESIGN.md §10).
+
+Tier-1 pins of the three contract properties the ISSUE names:
+
+* **partition** — tile ownership assigns every particle to exactly one
+  shard and the tiles cover the frame;
+* **conservation** — ownership-scheduled migration through
+  ``dlb.pack_windows``/``route_compressed`` semantics conserves the
+  global logical size and keeps every per-replica log-weight attached to
+  its own particle;
+* **halo equivalence** — halo slabs agree with the corresponding
+  full-frame slices (zero-filled over the border), and the tile-local
+  likelihood is *bitwise* the full-frame likelihood for owned particles.
+
+The multi-shard checks run on an **emulated mesh**: ``pack_windows`` is
+pure, so the two ``all_to_all``s of the exchange are reproduced by plain
+array transposition over a stacked shard dimension — real-collective
+equivalents run on the real 8-device mesh in the slow lane
+(tests/workers/distributed_checks.py).  A real ``shard_map`` domain
+filter runs here too, on the trivial 1-device mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DRAConfig, ParticleEnsemble, SIRConfig, \
+    ParallelParticleFilter, dlb, particles
+from repro.core import domain as D
+from repro.core.domain import DomainSpec
+from repro.launch.mesh import make_host_mesh
+from repro.models.tracking import (TrackingConfig, make_domain_spec,
+                                   make_tracking_model, patch_log_likelihood,
+                                   tile_patch_log_likelihood)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # hypothesis is a dev extra; the deterministic
+    HAVE_HYPOTHESIS = False   # half of this suite still runs without it
+
+KEY = jax.random.key(0)
+
+
+# ---------------------------------------------------------------------------
+# Geometry: grids, partition, halo slabs
+# ---------------------------------------------------------------------------
+
+def test_for_mesh_prefers_square_tiles():
+    spec = DomainSpec.for_mesh((48, 48), 8, 4)
+    assert spec.grid == (2, 4) and spec.tile_shape == (24, 12)
+    spec = DomainSpec.for_mesh((512, 512), 16, 4)
+    assert spec.grid == (4, 4)
+    assert DomainSpec.for_mesh((48, 64), 8, 4).grid == (2, 4)
+    with pytest.raises(ValueError):
+        DomainSpec.for_mesh((7, 7), 4, 1)       # nothing divides 7x7
+    with pytest.raises(ValueError):
+        DomainSpec(frame_shape=(48, 48), grid=(5, 2), halo=4)  # 48 % 5
+
+
+def test_owner_partition_covers_frame():
+    """Every pixel-center position is owned by exactly one shard, and the
+    interior pixels land in their geometric tile — the tiles partition
+    the frame."""
+    spec = DomainSpec.for_mesh((48, 48), 8, 4)
+    yy, xx = jnp.meshgrid(jnp.arange(48.0), jnp.arange(48.0), indexing="ij")
+    owner = np.asarray(D.owner_of(spec, yy.ravel(), xx.ravel()))
+    assert ((owner >= 0) & (owner < spec.tiles)).all()
+    th, tw = spec.tile_shape
+    # interior pixels (beyond the clamp band) are owned geometrically
+    y, x = np.asarray(yy.ravel()), np.asarray(xx.ravel())
+    interior = (y >= spec.halo) & (y <= 47 - spec.halo) & \
+               (x >= spec.halo) & (x <= 47 - spec.halo)
+    want = (y[interior].astype(int) // th) * spec.grid[1] \
+        + x[interior].astype(int) // tw
+    np.testing.assert_array_equal(owner[interior], want)
+    # every shard owns a nonempty region and tile areas tile the frame
+    assert len(set(owner.tolist())) == spec.tiles
+    assert spec.tiles * th * tw == 48 * 48
+
+
+def test_owner_matches_clipped_center():
+    """Ownership derives from the clipped rounded patch center — border
+    particles belong to the tile of the *clamped* center, which is what
+    guarantees their whole (clamped) patch sits in the owner's slab."""
+    spec = DomainSpec.for_mesh((48, 64), 8, 4)
+    ks = jax.random.split(KEY, 2)
+    y = jax.random.uniform(ks[0], (512,)) * 47.0
+    x = jax.random.uniform(ks[1], (512,)) * 63.0
+    y = y.at[:6].set(jnp.asarray([0.0, 0.49, 3.99, 47.0, 44.3, 23.5]))
+    x = x.at[:6].set(jnp.asarray([0.0, 63.0, 60.2, 0.7, 31.5, 32.49]))
+    owner = np.asarray(D.owner_of(spec, y, x))
+    th, tw = spec.tile_shape
+    cy = np.clip(np.asarray(jnp.round(y)).astype(int), 4, 43)
+    cx = np.clip(np.asarray(jnp.round(x)).astype(int), 4, 59)
+    np.testing.assert_array_equal(owner, (cy // th) * spec.grid[1] + cx // tw)
+
+
+def test_halo_slabs_agree_with_frame_slices():
+    """Halo slabs equal the corresponding full-frame slices; the part of
+    the ring hanging over the border is zero (and never read, since all
+    clamped patch centers are interior)."""
+    spec = DomainSpec.for_mesh((48, 64), 8, 4)
+    frame = jax.random.normal(KEY, (48, 64))
+    padded = np.pad(np.asarray(frame), spec.halo)
+    sh, sw = spec.slab_shape
+    for t in range(spec.tiles):
+        y0, x0 = (int(v) for v in spec.tile_origin(t))
+        slab = np.asarray(D.extract_slab(spec, frame, t))
+        np.testing.assert_array_equal(slab,
+                                      padded[y0:y0 + sh, x0:x0 + sw])
+    tiled = D.tile_frames(spec, frame[None])
+    assert tiled.shape == (1, spec.tiles, sh, sw)
+    for t in range(spec.tiles):
+        np.testing.assert_array_equal(np.asarray(tiled[0, t]),
+                                      np.asarray(D.extract_slab(spec, frame, t)))
+
+
+def test_tile_likelihood_bitwise_equals_full_frame():
+    """The exactness pin under the golden parity suite: for every
+    particle, the tile-local likelihood on its OWNER's halo slab is
+    bitwise the full-frame likelihood — including particles within
+    ``radius`` of the frame border and positions straddling tile
+    boundaries.  (Halo rebasing keeps all float math in frame
+    coordinates, so in-tile particles are interior by construction.)"""
+    cfg = TrackingConfig(img_size=(48, 64))
+    spec = make_domain_spec(cfg, 8)
+    frame = jax.random.normal(KEY, (48, 64))
+    n = 512
+    ks = jax.random.split(KEY, 3)
+    y = jax.random.uniform(ks[0], (n,)) * 47.0
+    x = jax.random.uniform(ks[1], (n,)) * 63.0
+    y = y.at[:8].set(jnp.asarray([0.0, 0.3, 3.5, 47.0, 46.6, 23.5,
+                                  24.49, 11.5]))
+    x = x.at[:8].set(jnp.asarray([0.0, 63.0, 15.5, 16.49, 31.5, 32.5,
+                                  47.5, 62.7]))
+    i0 = jax.random.uniform(ks[2], (n,)) * 3
+    state = jnp.stack([y, x, jnp.zeros(n), jnp.zeros(n), i0], axis=1)
+    full = np.asarray(patch_log_likelihood(state, frame, cfg))
+    owner = np.asarray(D.owner_of(spec, y, x))
+    for t in range(spec.tiles):
+        slab = D.extract_slab(spec, frame, t)
+        ll = np.asarray(tile_patch_log_likelihood(
+            state, slab, spec.slab_origin(t), cfg))
+        mask = owner == t
+        assert mask.any()
+        np.testing.assert_array_equal(ll[mask], full[mask])
+
+
+# ---------------------------------------------------------------------------
+# Emulated-mesh migration (pack_windows is pure; all_to_all == transpose)
+# ---------------------------------------------------------------------------
+
+def _random_shard_ensembles(key, spec, p, c, dead_frac=0.15):
+    h, w = spec.frame_shape
+    ks = jax.random.split(key, 5)
+    y = jax.random.uniform(ks[0], (p, c)) * (h - 1)
+    x = jax.random.uniform(ks[1], (p, c)) * (w - 1)
+    state = jnp.stack([y, x,
+                       jax.random.normal(ks[2], (p, c)),
+                       jnp.zeros((p, c)),
+                       jax.random.uniform(ks[3], (p, c)) * 3], axis=-1)
+    # per-replica log-weight tagged to the particle: lw = f(state)
+    lw = -0.1 * state[..., 0] - 0.03 * state[..., 1]
+    dead = jax.random.uniform(ks[4], (p, c)) < dead_frac
+    lw = jnp.where(dead, -jnp.inf, lw)
+    counts = jnp.where(dead, 0, 1).astype(jnp.int32)
+    return [ParticleEnsemble(state=state[s], log_weights=lw[s],
+                             counts=counts[s]) for s in range(p)]
+
+
+def _emulated_routes(spec, ensembles, k_cap):
+    """Per-shard migration packing with the fused all_to_all emulated by
+    gathering row ``s`` of every peer's send windows."""
+    p = spec.tiles
+    plans, perms, packs = [], [], []
+    for s in range(p):
+        plan = D.migration_plan(spec, ensembles[s],
+                                ensembles[s].state[:, 0:2], s)
+        perm = particles.permute(ensembles[s], plan.order)
+        plans.append(plan)
+        perms.append(perm)
+        packs.append(dlb.pack_windows(perm, plan.row_send, k_cap=k_cap))
+    routes = []
+    for s in range(p):
+        routes.append(dlb.RouteResult(
+            kept_counts=packs[s].kept_counts,
+            recv_state=jnp.stack([packs[j].send_state[s] for j in range(p)]),
+            recv_counts=jnp.stack([packs[j].send_counts[s]
+                                   for j in range(p)]),
+            recv_log_weights=jnp.stack([packs[j].send_log_weights[s]
+                                        for j in range(p)]),
+            overflow_units=packs[s].overflow_units,
+            send_slots=packs[s].send_slots,
+            send_units=packs[s].send_counts))
+    return plans, perms, routes
+
+
+def check_migration_conserves(spec, ensembles, k_cap):
+    p = spec.tiles
+    plans, perms, routes = _emulated_routes(spec, ensembles, k_cap)
+    before = sum(int(particles.logical_size(e)) for e in ensembles)
+    after = 0
+    overflow = 0
+    for s in range(p):
+        merged = dlb.merge_routed(perms[s], routes[s])
+        after += int(particles.logical_size(merged))
+        overflow += int(routes[s].overflow_units)
+        # per-replica log-weights stay attached: lw == f(state) slot-wise
+        lw = np.asarray(merged.log_weights)
+        st = np.asarray(jax.tree_util.tree_leaves(merged.state)[0])
+        want = -0.1 * st[..., 0] - 0.03 * st[..., 1]
+        live = np.isfinite(lw) & (np.asarray(merged.counts) > 0)
+        assert np.abs(np.where(live, lw - want, 0.0)).max() < 1e-6
+        # residency: with no overflow every live unit sits on its owner
+        if overflow == 0:
+            own = np.asarray(D.owner_of(
+                spec, jax.tree_util.tree_leaves(merged.state)[0][:, 0],
+                jax.tree_util.tree_leaves(merged.state)[0][:, 1]))
+            assert (own[live] == s).all()
+    assert after == before
+    return overflow
+
+
+def test_migration_conserves_size_and_weights():
+    spec = DomainSpec.for_mesh((48, 48), 8, 4)
+    for seed in range(4):
+        ens = _random_shard_ensembles(jax.random.fold_in(KEY, seed),
+                                      spec, p=8, c=64)
+        overflow = check_migration_conserves(spec, ens, k_cap=64)
+        assert overflow == 0    # k_cap == C can never overflow
+
+
+def test_migration_overflow_residency_still_conserves():
+    """Small windows overflow (the residue stays resident on the sender,
+    DESIGN.md §10.4) but logical size is still conserved exactly."""
+    spec = DomainSpec.for_mesh((48, 48), 8, 4)
+    ens = _random_shard_ensembles(jax.random.fold_in(KEY, 99), spec,
+                                  p=8, c=64, dead_frac=0.0)
+    overflow = check_migration_conserves(spec, ens, k_cap=4)
+    assert overflow > 0
+
+
+def test_migration_plan_schedule_shape():
+    spec = DomainSpec.for_mesh((48, 48), 8, 4)
+    ens = _random_shard_ensembles(KEY, spec, p=8, c=64)
+    for s in range(8):
+        plan = D.migration_plan(spec, ens[s], ens[s].state[:, 0:2], s)
+        row = np.asarray(plan.row_send)
+        assert row[s] == 0
+        live = np.isfinite(np.asarray(ens[s].log_weights))
+        own = np.asarray(plan.owner)
+        assert row.sum() == int((live & (own != s)).sum())
+        # dead slots are pinned home so they never waste window capacity
+        assert (own[~live] == s).all()
+        assert sorted(np.asarray(plan.order).tolist()) == list(range(64))
+
+
+def test_emulated_exchange_matches_full_frame_likelihood():
+    """End-to-end migrate→tile-reweight→ship-back on the emulated 8-shard
+    mesh reproduces the full-frame likelihood bitwise on every live home
+    slot — the mechanism behind the golden-pinned filter parity."""
+    cfg = TrackingConfig(img_size=(48, 48))
+    spec = make_domain_spec(cfg, 8)
+    frame = jax.random.normal(jax.random.fold_in(KEY, 7), (48, 48))
+    p, c, k_cap = 8, 64, 64
+    ens = _random_shard_ensembles(jax.random.fold_in(KEY, 8), spec, p, c)
+    plans, perms, routes = _emulated_routes(spec, ens, k_cap)
+    ll_recv_all = []
+    ll_local_all = []
+    for s in range(p):
+        merged = dlb.merge_routed(perms[s], routes[s])
+        slab = D.extract_slab(spec, frame, s)
+        ll_all = tile_patch_log_likelihood(merged.state, slab,
+                                           spec.slab_origin(s), cfg)
+        ll_local_all.append(ll_all[:c])
+        ll_recv_all.append(ll_all[c:].reshape(p, k_cap))
+    for s in range(p):
+        ll_back = jnp.stack([ll_recv_all[j][s] for j in range(p)])
+        ll = D.scatter_returned_ll(ll_local_all[s], ll_back,
+                                   routes[s].send_slots,
+                                   routes[s].send_units, plans[s].order)
+        want = patch_log_likelihood(ens[s].state, frame, cfg)
+        live = np.isfinite(np.asarray(ens[s].log_weights))
+        np.testing.assert_array_equal(np.asarray(ll)[live],
+                                      np.asarray(want)[live])
+
+
+# ---------------------------------------------------------------------------
+# Real shard_map domain filter on the trivial 1-device mesh (tier-1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["rna", "rpa"])
+def test_domain_filter_matches_replicated_on_1device_mesh(kind):
+    """The full domain path (tiled observations, slab in_specs, the
+    migrate-after-advance hook, real collectives) reproduces the
+    replicated-frame sharded filter exactly.  The 8-shard equivalent is
+    golden-pinned in the slow lane (tests/test_distributed.py)."""
+    cfg = TrackingConfig(img_size=(32, 32), v_init=1.0)
+    model = make_tracking_model(cfg)
+    from repro.data.synthetic_movie import generate_movie, tile_shard_frames
+    movie = generate_movie(jax.random.key(0), cfg, n_frames=6)
+    mesh = make_host_mesh(1)
+    sir = SIRConfig(n_particles=256, ess_frac=0.5)
+    dra = DRAConfig(kind=kind)
+    rep = ParallelParticleFilter(model=model, sir=sir, dra=dra,
+                                 mesh=mesh)._run_sharded(jax.random.key(1),
+                                                         movie.frames)
+    spec = make_domain_spec(cfg, 1)
+    dom = ParallelParticleFilter(model=model, sir=sir, dra=dra, mesh=mesh,
+                                 domain=spec).run(jax.random.key(1),
+                                                  movie.frames)
+    for field in ("estimates", "ess", "log_marginal"):
+        np.testing.assert_allclose(np.asarray(getattr(dom, field)),
+                                   np.asarray(getattr(rep, field)),
+                                   atol=1e-5, rtol=0, err_msg=field)
+    assert int(np.asarray(dom.diag["mig_overflow"]).sum()) == 0
+    # pre-tiled observations are accepted and give the same run
+    tiled = tile_shard_frames(movie.frames, spec)
+    dom2 = ParallelParticleFilter(model=model, sir=sir, dra=dra, mesh=mesh,
+                                  domain=spec).run(jax.random.key(1), tiled)
+    np.testing.assert_array_equal(np.asarray(dom.estimates),
+                                  np.asarray(dom2.estimates))
+
+
+def test_migrate_residency_api_under_shard_map():
+    """The residency-transfer primitive runs under a real ``shard_map``
+    (trivial 1-shard mesh: nothing moves, but the collective path and the
+    compressed merge layout are exercised end-to-end)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import runtime
+
+    spec = DomainSpec.for_mesh((32, 32), 1, 4)
+    ens = _random_shard_ensembles(KEY, spec, p=1, c=32)[0]
+
+    def shard_fn(state, lw, counts):
+        e = ParticleEnsemble(state=state[0], log_weights=lw[0],
+                             counts=counts[0])
+        merged, diag = D.migrate(spec, e, e.state[:, 0:2],
+                                 axis_name="data")
+        return (particles.logical_size(merged)[None],
+                diag["mig_moved"][None], diag["mig_overflow"][None])
+
+    fn = runtime.shard_map(
+        shard_fn, make_host_mesh(1),
+        in_specs=(P("data"), P("data"), P("data")),
+        out_specs=(P("data"), P("data"), P("data")))
+    size, moved, overflow = fn(ens.state[None], ens.log_weights[None],
+                               ens.counts[None])
+    assert int(size[0]) == int(particles.logical_size(ens))
+    assert int(moved[0]) == 0 and int(overflow[0]) == 0
+
+
+def test_domain_filter_validates_mesh_and_observations():
+    cfg = TrackingConfig(img_size=(32, 32))
+    model = make_tracking_model(cfg)
+    mesh = make_host_mesh(1)
+    with pytest.raises(ValueError, match="mesh"):
+        ParallelParticleFilter(
+            model=model, sir=SIRConfig(n_particles=64),
+            domain=DomainSpec.for_mesh((32, 32), 1, 4)).run(
+                jax.random.key(0), jnp.zeros((3, 32, 32)))
+    pf = ParallelParticleFilter(
+        model=model, sir=SIRConfig(n_particles=64), mesh=mesh,
+        domain=DomainSpec.for_mesh((32, 32), 2, 4))
+    with pytest.raises(ValueError, match="tiles"):
+        pf.run(jax.random.key(0), jnp.zeros((3, 32, 32)))
+    pf = ParallelParticleFilter(
+        model=model, sir=SIRConfig(n_particles=64), mesh=mesh,
+        domain=DomainSpec.for_mesh((32, 32), 1, 4))
+    with pytest.raises(ValueError, match="observations"):
+        pf.run(jax.random.key(0), jnp.zeros((3, 16, 16)))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property half (dev extra; skipped when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def specs_and_positions(draw):
+        gy = draw(st.sampled_from([1, 2, 4]))
+        gx = draw(st.sampled_from([1, 2, 4]))
+        th = draw(st.integers(6, 24))
+        tw = draw(st.integers(6, 24))
+        halo = draw(st.integers(0, 5))
+        h, w = gy * th, gx * tw
+        if 2 * halo >= min(h, w):
+            halo = 0
+        spec = DomainSpec(frame_shape=(h, w), grid=(gy, gx), halo=halo)
+        n = draw(st.integers(1, 48))
+        seed = draw(st.integers(0, 2 ** 16))
+        ks = jax.random.split(jax.random.key(seed), 2)
+        y = jax.random.uniform(ks[0], (n,)) * (h - 1)
+        x = jax.random.uniform(ks[1], (n,)) * (w - 1)
+        return spec, y, x
+
+    @given(sp=specs_and_positions())
+    @settings(max_examples=50, deadline=None)
+    def test_ownership_is_a_partition(sp):
+        """owner_of is the clipped-center tile: every position is owned by
+        exactly one shard, in range, matching the brute-force tile
+        search."""
+        spec, y, x = sp
+        owner = np.asarray(D.owner_of(spec, y, x))
+        assert ((owner >= 0) & (owner < spec.tiles)).all()
+        h, w = spec.frame_shape
+        th, tw = spec.tile_shape
+        cy = np.clip(np.round(np.asarray(y)).astype(int), spec.halo,
+                     h - 1 - spec.halo)
+        cx = np.clip(np.round(np.asarray(x)).astype(int), spec.halo,
+                     w - 1 - spec.halo)
+        np.testing.assert_array_equal(owner,
+                                      (cy // th) * spec.grid[1] + cx // tw)
+
+    @given(seed=st.integers(0, 2 ** 16), k_cap=st.integers(2, 64),
+           dead=st.floats(0.0, 0.6))
+    @settings(max_examples=25, deadline=None)
+    def test_migration_conservation_property(seed, k_cap, dead):
+        """Migration conserves logical size and weight attachment for
+        arbitrary ensembles and window capacities (overflow included)."""
+        spec = DomainSpec.for_mesh((48, 48), 8, 4)
+        ens = _random_shard_ensembles(jax.random.key(seed), spec, p=8,
+                                      c=32, dead_frac=dead)
+        check_migration_conserves(spec, ens, k_cap=k_cap)
+
+    @given(seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=20, deadline=None)
+    def test_halo_slab_equivalence_property(seed):
+        spec = DomainSpec.for_mesh((24, 36), 6, 3)
+        frame = jax.random.normal(jax.random.key(seed), (24, 36))
+        padded = np.pad(np.asarray(frame), spec.halo)
+        sh, sw = spec.slab_shape
+        for t in range(spec.tiles):
+            y0, x0 = (int(v) for v in spec.tile_origin(t))
+            np.testing.assert_array_equal(
+                np.asarray(D.extract_slab(spec, frame, t)),
+                padded[y0:y0 + sh, x0:x0 + sw])

@@ -33,6 +33,69 @@ def test_patch_likelihood_matches_oracle(n, h, w, radius, block, matched):
     np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("matched", [True, False])
+def test_patch_likelihood_edge_of_frame(matched):
+    """Particles within ``radius`` of the frame border: all three
+    implementations (Pallas kernel, ref oracle, models/tracking oracle)
+    clip the patch center into the interior ``[R, dim-1-R]`` identically.
+    Pinned exactly — domain decomposition relies on the clipped center
+    for ownership, so kernel and oracle may not disagree even by one
+    pixel (DESIGN.md §10.2)."""
+    from repro.models.tracking import TrackingConfig, patch_log_likelihood
+    radius, h, w = 4, 48, 64
+    cfg = TrackingConfig(img_size=(h, w), patch_radius=radius,
+                         likelihood_form="matched" if matched else "eq4",
+                         sigma_psf=1.16, sigma_like=2.0, i_bg=0.0)
+    img = jax.random.normal(jax.random.fold_in(KEY, 5), (h, w))
+    y = jnp.asarray([0.0, 0.49, 3.5, 3.99, 4.0, 47.0, 46.51, 44.0,
+                     43.99, 23.5, 0.0, 47.0, 24.0, 1.7, 45.2, 20.0])
+    x = jnp.asarray([0.0, 63.0, 0.7, 62.3, 59.0, 0.0, 63.0, 59.99,
+                     60.0, 31.5, 63.0, 0.0, 24.0, 61.8, 2.2, 30.0])
+    i0 = jnp.ones((16,)) * 2.0
+    got = patch_log_likelihood_kernel(y, x, i0, img, radius=radius,
+                                      matched=matched, block_n=16,
+                                      interpret=True)
+    want = ref.patch_log_likelihood_ref(y, x, i0, img, radius=radius,
+                                        matched=matched)
+    oracle = patch_log_likelihood(
+        jnp.stack([y, x, jnp.zeros(16), jnp.zeros(16), i0], axis=1),
+        img, cfg)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(oracle))
+    # the agreed clamp, spelled out: centers project onto [R, dim-1-R]
+    cy = np.clip(np.round(np.asarray(y)).astype(int), radius, h - 1 - radius)
+    assert cy.min() == radius and cy.max() == h - 1 - radius
+
+
+def test_patch_likelihood_center_bounds_and_origin():
+    """The domain-decomposition geometry operands: evaluating against a
+    halo slab with (center_bounds, frame_origin) equals the full-frame
+    evaluation for every particle whose clamped center lies inside the
+    slab's owned tile — kernel and oracle alike."""
+    radius, h, w = 3, 40, 40
+    img = jax.random.normal(jax.random.fold_in(KEY, 9), (h, w))
+    # slab = rows/cols [8, 32) of the frame plus a radius-wide halo
+    oy = ox = 8 - radius
+    slab = img[oy:32 + radius, ox:32 + radius]
+    bounds = jnp.asarray([8, 31, 8, 31], jnp.int32)
+    ks = jax.random.split(jax.random.fold_in(KEY, 11), 3)
+    y = 8.0 + jax.random.uniform(ks[0], (64,)) * 23.0
+    x = 8.0 + jax.random.uniform(ks[1], (64,)) * 23.0
+    i0 = jax.random.uniform(ks[2], (64,)) * 3
+    origin = jnp.asarray([oy, ox], jnp.int32)
+    full = ref.patch_log_likelihood_ref(y, x, i0, img, radius=radius)
+    got_ref = ref.patch_log_likelihood_ref(y, x, i0, slab, radius=radius,
+                                           center_bounds=bounds,
+                                           frame_origin=origin)
+    got_kernel = patch_log_likelihood_kernel(y, x, i0, slab, radius=radius,
+                                             block_n=64,
+                                             center_bounds=bounds,
+                                             frame_origin=origin,
+                                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(full))
+    np.testing.assert_allclose(got_kernel, full, rtol=3e-5, atol=3e-5)
+
+
 @pytest.mark.parametrize("n_in,n_out,block", [
     (256, 256, 64), (1000, 2048, 256), (8192, 4096, 1024),
     (4096, 4096, 512),

@@ -10,6 +10,9 @@ keeps its single default device.  Prints one JSON dict with sections:
   routing      — compressed-routing multiplicity conservation (paper §V)
   conservation — multi-seed logical-size / weight-attachment properties
                  through ring exchange and RPA routing
+  domain       — domain-decomposed vs replicated-frame filter parity on
+                 the 8-shard mesh (DESIGN.md §10.3; golden-pinned by
+                 tests/golden/sir_parity.json "domain")
 """
 import json
 
@@ -23,11 +26,13 @@ import numpy as np             # noqa: E402
 
 from repro.core import (SIRConfig, FilterBank,              # noqa: E402
                         ParallelParticleFilter, ParticleEnsemble)
+from repro.core import domain as domain_mod                 # noqa: E402
 from repro.core import particles                            # noqa: E402
 from repro.core.distributed import DRAConfig, _ring_exchange  # noqa: E402
 from repro.core import dlb                                  # noqa: E402
 from repro.launch.mesh import make_host_mesh                # noqa: E402
 from repro.models.tracking import (TrackingConfig,          # noqa: E402
+                                   make_domain_spec,
                                    make_tracking_model)
 from repro.data.synthetic_movie import (generate_movie,     # noqa: E402
                                         tracking_rmse)
@@ -267,8 +272,59 @@ def conservation_properties(n_seeds: int = 6) -> dict:
     }
 
 
+def domain_checks() -> dict:
+    """Domain-decomposed vs replicated-frame filter on the real 8-shard
+    mesh: identical trajectories, actual migration traffic, and a
+    boundary-crossing ground-truth trajectory.  The configuration is
+    single-sourced with generate_parity.py::domain_golden via
+    tests/golden/domain_config.py."""
+    from tests.golden.domain_config import DOMAIN_PARITY as dp
+
+    cfg = TrackingConfig(img_size=(dp["img"], dp["img"]),
+                         v_init=dp["v_init"],
+                         patch_radius=dp["patch_radius"])
+    model = make_tracking_model(cfg)
+    movie = generate_movie(jax.random.key(dp["movie_seed"]), cfg,
+                           n_frames=dp["n_frames"])
+    spec = make_domain_spec(cfg, dp["tiles"])
+    owners = np.asarray(domain_mod.owner_of(spec,
+                                            movie.trajectories[:, 0, 0],
+                                            movie.trajectories[:, 0, 1]))
+    mesh = make_host_mesh(dp["tiles"])
+    out = {"tiles_visited": len(set(owners.tolist())),
+           "grid": list(spec.grid),
+           "slab_bytes": spec.slab_bytes(),
+           "frame_bytes": spec.frame_bytes()}
+    for kind, extra in dp["dras"]:
+        sir = SIRConfig(n_particles=dp["n_particles"],
+                        ess_frac=dp["ess_frac"])
+        dra = DRAConfig(kind=kind, **extra)
+        rep = ParallelParticleFilter(model=model, sir=sir, dra=dra,
+                                     mesh=mesh).run(
+                                         jax.random.key(dp["run_seed"]),
+                                         movie.frames)
+        dom = ParallelParticleFilter(model=model, sir=sir, dra=dra,
+                                     mesh=mesh, domain=spec).run(
+                                         jax.random.key(dp["run_seed"]),
+                                         movie.frames)
+        out[kind] = {
+            "estimates": np.asarray(dom.estimates).tolist(),
+            "ess": np.asarray(dom.ess).tolist(),
+            "log_marginal": np.asarray(dom.log_marginal).tolist(),
+            "replicated_max_diff": max(
+                float(np.max(np.abs(np.asarray(getattr(dom, f))
+                                    - np.asarray(getattr(rep, f)))))
+                for f in ("estimates", "ess", "log_marginal")),
+            "mig_moved_total": int(np.asarray(dom.diag["mig_moved"]).sum()),
+            "mig_overflow_total": int(
+                np.asarray(dom.diag["mig_overflow"]).sum()),
+        }
+    return out
+
+
 if __name__ == "__main__":
     print(json.dumps({"dra": dra_checks(),
+                      "domain": domain_checks(),
                       "parity": parity_trajectories(),
                       "bank": bank_checks(),
                       "routing": routing_conservation(),
