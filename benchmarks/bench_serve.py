@@ -1,0 +1,290 @@
+"""Resident-session serving throughput → BENCH_serve.json.
+
+Measures the ``ParticleSessionServer`` steady state (frames/s across all
+live sessions) on the single-device path and pins the claim the engine
+exists for: **membership churn is free**.  Three sweeps:
+
+* ``occupancy``: frames/s vs. number of attached sessions on a fixed
+  ``B_max``-slot bank.  The resident program always steps all ``B_max``
+  slots (inactive ones run masked no-op math), so frames/s grows with
+  occupancy at near-constant cost per tick — the recorded curve is the
+  baseline for future masking/compaction optimisations.
+* ``churn``: frames/s vs. churn rate (attach/detach events per 100
+  steps) at half occupancy, against the NAIVE baseline that rebuilds a
+  right-sized ``FilterBank`` step program on every membership change
+  (what serving without the slot-mask design costs: a retrace + compile
+  per event).  ``throughput_ratio`` = resident / naive wall-clock
+  throughput at equal work; retrace counts for both are recorded and the
+  resident engine is asserted to have compiled exactly once.
+* ``suspend_resume``: wall-clock of a suspend→resume round-trip through
+  ``repro.checkpoint.store`` (the session-migration primitive).
+
+Schema notes (also in README "Benchmarks"): every row carries raw
+``seconds`` plus derived ``frames_per_sec``; on this 1-core CI container
+the numbers are serialized-work measurements (DESIGN.md §10.5 explains
+how to read ratios measured without real parallel hardware).  ``--smoke``
+shrinks sizes and writes the gitignored ``BENCH_serve.smoke.json``
+instead of the committed baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEST = os.path.join(REPO, "BENCH_serve.json")
+
+A, Q, H, R0 = 0.9, 0.5, 1.0, 0.4
+
+
+def _lg_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.smc import StateSpaceModel
+
+    def init_sampler(key, n):
+        return jax.random.normal(key, (n, 1)) * 2.0
+
+    def dynamics_sample(key, state):
+        return A * state + jnp.sqrt(Q) * jax.random.normal(key, state.shape)
+
+    def log_likelihood(state, z):
+        return -0.5 * (z - H * state[:, 0]) ** 2 / R0
+
+    return StateSpaceModel(init_sampler, dynamics_sample, log_likelihood,
+                           state_dim=1)
+
+
+def _drive(server, handles, rng, steps: int) -> float:
+    """Steady-state seconds for ``steps`` ticks with every session fed."""
+    import jax
+    import numpy as np
+
+    for _ in range(3):                       # warm the resident program
+        for h in handles:
+            server.submit(h, np.float32(rng.normal()))
+        server.step()
+    jax.block_until_ready(server._carry)     # noqa: SLF001 — warmup must
+    t0 = time.perf_counter()                 # not bleed into the window
+    for _ in range(steps):
+        for h in handles:
+            server.submit(h, np.float32(rng.normal()))
+        server.step()
+    jax.block_until_ready(server._carry)     # noqa: SLF001 — flush dispatch
+    return time.perf_counter() - t0
+
+
+def occupancy_sweep(smoke: bool) -> list[dict]:
+    """Frames/s vs. live-session count on a fixed-capacity bank."""
+    import jax
+    import numpy as np
+    from repro.core import SIRConfig
+    from repro.serve import ParticleSessionServer
+
+    b_max = 8 if smoke else 16
+    n = 512 if smoke else 2048
+    steps = 30 if smoke else 100
+    model = _lg_model()
+    rows = []
+    occupancies = sorted({1, b_max // 4, b_max // 2, b_max} - {0})
+    for occ in occupancies:
+        srv = ParticleSessionServer(
+            model=model, sir=SIRConfig(n_particles=n, ess_frac=0.5),
+            capacity=b_max)
+        handles = [srv.attach(jax.random.key(i)) for i in range(occ)]
+        dt = _drive(srv, handles, np.random.default_rng(0), steps)
+        assert srv.step_traces == 1, srv.step_traces
+        rows.append({
+            "capacity": b_max, "occupancy": occ, "particles": n,
+            "steps": steps, "seconds": dt,
+            "frames_per_sec": occ * steps / dt,
+        })
+    return rows
+
+
+def churn_sweep(smoke: bool) -> list[dict]:
+    """Resident vs. recompile-per-membership-change under churn.
+
+    Both engines process the identical workload: ``steps`` ticks at half
+    occupancy with ``rate`` membership events per 100 ticks (alternating
+    detach of the oldest / attach of a fresh session).  The naive
+    baseline is ``FilterBank`` semantics without slots: any membership
+    change rebuilds + recompiles a bank step sized to the new member
+    count.
+    """
+    import jax
+    import numpy as np
+    from repro.core import SIRConfig
+    from repro.serve import ParticleSessionServer
+
+    b_max = 8
+    n = 512 if smoke else 2048
+    steps = 30 if smoke else 100
+    model = _lg_model()
+    sir = SIRConfig(n_particles=n, ess_frac=0.5)
+    rows = []
+    for rate in ((0, 10) if smoke else (0, 5, 10, 25)):
+        # one membership event every `every` ticks ⇒ `rate` per 100 steps,
+        # independent of the sweep's step count (smoke shrinks steps)
+        every = 100 // rate if rate else 0
+
+        # resident engine
+        srv = ParticleSessionServer(model=model, sir=sir, capacity=b_max)
+        handles = [srv.attach(jax.random.key(i)) for i in range(b_max // 2)]
+        rng = np.random.default_rng(1)
+        for h in handles:                    # warm
+            srv.submit(h, np.float32(0.0))
+        srv.step()
+        jax.block_until_ready(srv._carry)    # noqa: SLF001
+        frames = 0
+        t0 = time.perf_counter()
+        for t in range(steps):
+            if every and t % every == every - 1:
+                srv.detach(handles.pop(0))
+                handles.append(srv.attach(jax.random.key(1000 + t)))
+            for h in handles:
+                srv.submit(h, np.float32(rng.normal()))
+            frames += srv.step()
+        jax.block_until_ready(srv._carry)    # noqa: SLF001
+        dt_resident = time.perf_counter() - t0
+        assert srv.step_traces == 1, \
+            f"resident engine retraced under churn: {srv.step_traces}"
+
+        dt_naive, naive_compiles = _naive_baseline(model, sir, steps, every,
+                                                   b_max // 2)
+        rows.append({
+            "capacity": b_max, "occupancy": b_max // 2, "particles": n,
+            "steps": steps, "churn_per_100_steps": rate,
+            "frames": frames,
+            "resident_seconds": dt_resident,
+            "resident_frames_per_sec": frames / dt_resident,
+            "resident_step_traces": 1,
+            "naive_seconds": dt_naive,
+            "naive_frames_per_sec": frames / dt_naive,
+            "naive_compiles": naive_compiles,
+            "throughput_ratio": dt_naive / dt_resident,
+        })
+    return rows
+
+
+def _naive_baseline(model, sir, steps: int, every: int,
+                    occ: int) -> tuple[float, int]:
+    """Serving without slots: one jitted scan-step sized to the CURRENT
+    member count, rebuilt (recompiled) on every membership change."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import filters
+
+    compiles = 0
+    rng = np.random.default_rng(1)
+
+    def build(b):
+        nonlocal compiles
+        compiles += 1                        # a fresh jit cache every time
+        step = filters.make_bank_step(model, sir)
+        return jax.jit(lambda c, f: step(c, (f, jnp.ones((b,), bool))))
+
+    keys = [jax.random.key(i) for i in range(occ)]
+    carry = jax.jit(jax.vmap(
+        lambda k: filters.member_carry(k, model, sir)))(jnp.stack(keys))
+    fn = build(occ)
+    carry, _ = fn(carry, jnp.zeros((occ,), jnp.float32))    # warm + compile
+    jax.block_until_ready(carry)
+    t0 = time.perf_counter()
+    for t in range(steps):
+        if every and t % every == every - 1:
+            # membership change: drop the oldest member, add a fresh one.
+            # A membership-sized program has no slack slots, so the
+            # change means a new program: re-jit, and the compile lands on
+            # this tick's normal step below (no extra warm step — both
+            # engines process exactly `steps` ticks of `occ` frames; the
+            # compile cost is the only difference, which is the point).
+            carry = _rotate_in(carry, filters.member_carry(
+                jax.random.key(1000 + t), model, sir))
+            fn = build(occ)
+        frames = jnp.asarray(rng.normal(size=occ).astype(np.float32))
+        carry, _ = fn(carry, frames)
+    jax.block_until_ready(carry)
+    return time.perf_counter() - t0, compiles
+
+
+def _rotate_in(carry, fresh):
+    """Drop member 0, append ``fresh`` — the naive engine's attach."""
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_map(
+        lambda x, f: jnp.concatenate([x[1:], f[None]]), carry, fresh)
+
+
+def suspend_resume_cost(smoke: bool) -> dict:
+    """Wall-clock of one suspend→resume migration through the store."""
+    import jax
+    import numpy as np
+    from repro.core import SIRConfig
+    from repro.serve import ParticleSessionServer
+
+    n = 512 if smoke else 2048
+    model = _lg_model()
+    sir = SIRConfig(n_particles=n, ess_frac=0.5)
+    srv = ParticleSessionServer(model=model, sir=sir, capacity=2)
+    h = srv.attach(jax.random.key(0))
+    for _ in range(5):
+        srv.submit(h, np.float32(0.1))
+    srv.step()
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        srv.suspend(h, directory=d)
+        h2 = srv.resume_from(d)
+        dt = time.perf_counter() - t0
+        srv.submit(h2, np.float32(0.2))
+        assert srv.step() == 1
+    return {"particles": n, "roundtrip_seconds": dt}
+
+
+def run() -> list[dict]:
+    """benchmarks.run entry point — also writes BENCH_serve.json
+    (``--smoke`` writes the gitignored .smoke sibling instead)."""
+    smoke = "--smoke" in sys.argv
+    occ = occupancy_sweep(smoke)
+    churn = churn_sweep(smoke)
+    sus = suspend_resume_cost(smoke)
+    dest = DEST.replace(".json", ".smoke.json") if smoke else DEST
+    with open(dest, "w") as f:
+        json.dump({"smoke": smoke, "occupancy": occ, "churn": churn,
+                   "suspend_resume": sus}, f, indent=1)
+    rows = []
+    for r in occ:
+        rows.append({
+            "name": (f"serve/occupancy_{r['occupancy']}of{r['capacity']}"
+                     f"_n{r['particles']}"),
+            "us_per_call": r["seconds"] / r["steps"] * 1e6,
+            "derived": f"{r['frames_per_sec']:.0f} frames/s",
+        })
+    for r in churn:
+        rows.append({
+            "name": (f"serve/churn_{r['churn_per_100_steps']}per100"
+                     f"_n{r['particles']}"),
+            "us_per_call": r["resident_seconds"] / r["steps"] * 1e6,
+            "derived": (f"{r['throughput_ratio']:.1f}x vs naive "
+                        f"({r['naive_compiles']} naive compiles, "
+                        f"resident 1)"),
+        })
+    rows.append({
+        "name": f"serve/suspend_resume_n{sus['particles']}",
+        "us_per_call": sus["roundtrip_seconds"] * 1e6,
+        "derived": "store round-trip",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    dest = DEST.replace(".json", ".smoke.json") if "--smoke" in sys.argv \
+        else DEST
+    print(f"wrote {dest}", file=sys.stderr)

@@ -25,6 +25,9 @@ SUITES = {
     "domain": ("benchmarks.bench_domain",
                "domain decomposition vs replicated frames "
                "(BENCH_domain.json)"),
+    "serve": ("benchmarks.bench_serve",
+              "resident-session serving: occupancy/churn sweeps vs naive "
+              "recompile baseline (BENCH_serve.json)"),
 }
 
 

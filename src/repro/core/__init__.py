@@ -11,7 +11,9 @@ from repro.core.domain import DomainSpec
 from repro.core.smc import (SIRCarry, SIRConfig, StateSpaceModel,
                             ess_resample, make_sir_step, run_sir)
 from repro.core.distributed import DRAConfig
-from repro.core.filters import FilterBank, FilterResult, ParallelParticleFilter
+from repro.core.filters import (FilterBank, FilterResult,
+                                ParallelParticleFilter, make_bank_step,
+                                make_sharded_bank_step, member_carry)
 
 __all__ = [
     "ParticleEnsemble", "advance", "effective_sample_size", "init_ensemble",
@@ -19,5 +21,6 @@ __all__ = [
     "permute", "resample", "resample_compressed", "reweight", "weighted_mean",
     "DomainSpec", "SIRCarry", "SIRConfig", "StateSpaceModel", "ess_resample",
     "make_sir_step", "run_sir", "DRAConfig", "FilterBank", "FilterResult",
-    "ParallelParticleFilter",
+    "ParallelParticleFilter", "make_bank_step", "make_sharded_bank_step",
+    "member_carry",
 ]

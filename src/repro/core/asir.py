@@ -25,6 +25,9 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class ASIRConfig:
+    """Auxiliary-SIR lookahead knobs (paper §VI.F): the piecewise-
+    constant likelihood lattice the first-stage weights are read from."""
+
     grid: int = 64            # G — lattice resolution per axis
     intensity_bins: int = 4   # piecewise-constant bins for I_0
     i_max: float = 4.0

@@ -108,6 +108,8 @@ def _shard_log_z(log_weights: Array, axis_name: str) -> tuple[Array, Array]:
 
 
 def global_log_z(log_weights: Array, axis_name: str) -> Array:
+    """logsumexp of ALL shards' weights — the global normalizer (one
+    all_gather of per-shard scalars, paper §III)."""
     _, gathered = _shard_log_z(log_weights, axis_name)
     return jax.scipy.special.logsumexp(gathered)
 

@@ -52,6 +52,8 @@ def balanced_targets(total: Array, p: int) -> Array:
 
 
 def surplus_deficit(counts: Array, targets: Array) -> tuple[Array, Array]:
+    """Per-shard (surplus, deficit) vs the balanced targets (paper §IV):
+    the two sides every DLB scheduler matches up."""
     s = jnp.maximum(counts - targets, 0)
     d = jnp.maximum(targets - counts, 0)
     return s, d
@@ -162,6 +164,10 @@ class PackResult(NamedTuple):
 
 
 class RouteResult(NamedTuple):
+    """What one ``route_compressed`` collective leaves on each shard:
+    multiplicities kept at home plus the per-peer windows of received
+    (state, count, per-replica log-weight) triples (paper §V)."""
+
     kept_counts: Array          # (C,)      multiplicities staying local
     recv_state: Any             # (P, K, ...) received unique particles
     recv_counts: Array          # (P, K)    received multiplicities

@@ -90,23 +90,28 @@ class DomainSpec:
     # -- static geometry ---------------------------------------------------
     @property
     def tiles(self) -> int:
+        """Total tile count ``gy * gx`` (== the mesh-axis size)."""
         return self.grid[0] * self.grid[1]
 
     @property
     def tile_shape(self) -> tuple[int, int]:
+        """(th, tw) of one owned tile, halo excluded."""
         return (self.frame_shape[0] // self.grid[0],
                 self.frame_shape[1] // self.grid[1])
 
     @property
     def slab_shape(self) -> tuple[int, int]:
+        """(sh, sw) of one observation slab: tile + halo ring."""
         th, tw = self.tile_shape
         return (th + 2 * self.halo, tw + 2 * self.halo)
 
     def frame_bytes(self, dtype_bytes: int = 4) -> int:
+        """Bytes of one replicated full frame (the memory we shed)."""
         h, w = self.frame_shape
         return h * w * dtype_bytes
 
     def slab_bytes(self, dtype_bytes: int = 4) -> int:
+        """Bytes of one per-shard slab (~1/P of a frame + halo)."""
         sh, sw = self.slab_shape
         return sh * sw * dtype_bytes
 
@@ -211,6 +216,10 @@ def tile_frames(spec: DomainSpec, frames: Array) -> Array:
 # ---------------------------------------------------------------------------
 
 class MigrationPlan(NamedTuple):
+    """Ownership-derived routing schedule for one migration step
+    (DESIGN.md §10.3): who owns each slot, the destination-contiguous
+    slot order, and the per-peer unit counts to ship."""
+
     owner: Array       # (C,) owning shard per slot (dead slots pinned home)
     order: Array       # (C,) permutation: home layout -> routing layout
     row_send: Array    # (P,) units this shard ships to each peer

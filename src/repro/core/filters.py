@@ -29,6 +29,13 @@ Array = jax.Array
 
 
 class FilterResult(NamedTuple):
+    """Stacked per-frame filter outputs plus the posterior ensemble.
+
+    Shapes are ``(K, ...)`` for a single filter over K frames and gain a
+    leading bank dim ``(B, K, ...)`` from ``FilterBank`` /
+    ``repro.serve.sessions`` drivers.
+    """
+
     estimates: Any       # (K, ...) MMSE per frame ((B, K, ...) for a bank)
     ess: Array           # (K,)
     log_marginal: Array  # (K,) per-frame increments
@@ -63,6 +70,14 @@ class ParallelParticleFilter:
     domain: domain_mod.DomainSpec | None = None
 
     def run(self, key: Array, observations: Any) -> FilterResult:
+        """Filter a stacked observation sequence.
+
+        Args:
+          key: a single PRNG key; split internally into init + run streams.
+          observations: pytree of frames with leading dim ``K`` (time).
+        Returns:
+          ``FilterResult`` with per-frame leading dim ``K``.
+        """
         if self.domain is not None and self.mesh is None:
             raise ValueError("domain decomposition needs a mesh: the tile "
                              "grid maps onto a mesh axis (pass mesh=, or "
@@ -151,19 +166,37 @@ class FilterBank:
     bank_axis: str | None = None             # optional bank-sharding mesh axis
 
     def run(self, keys: Array, observations: Any) -> FilterResult:
-        """keys: (B,) PRNG keys, one per member.  observations: pytree of
-        per-member streams with leading dims (B, K_frames, ...).  Returns a
-        ``FilterResult`` whose every field carries a leading bank dim."""
+        """Run every bank member over its observation stream.
+
+        A thin ``lax.scan`` over the single-frame ``bank_step`` (all slots
+        active on every frame — the resident serving engine in
+        ``repro.serve.sessions`` drives the same step one frame at a time
+        under churn instead).
+
+        Args:
+          keys: ``(B,)`` PRNG keys, one per member.
+          observations: pytree of per-member streams with leading dims
+            ``(B, K_frames, ...)``.
+        Returns:
+          a ``FilterResult`` whose every field carries a leading bank dim.
+        """
         if self.mesh is None or self.mesh.devices.size == 1:
             return self._run_local(keys, observations)
         return self._run_sharded(keys, observations)
 
     def _run_local(self, keys: Array, observations: Any) -> FilterResult:
-        def member(key, obs):
-            carry, outs = smc.run_sir(key, self.model, self.sir, obs)
-            return outs, carry.ensemble
+        step = make_bank_step(self.model, self.sir)
 
-        outs, final = jax.jit(jax.vmap(member))(keys, observations)
+        def scan_fn(keys, obs):
+            carry = jax.vmap(
+                lambda k: member_carry(k, self.model, self.sir))(keys)
+            k_frames = jax.tree_util.tree_leaves(obs)[0].shape[1]
+            active = jnp.ones((k_frames, jnp.shape(keys)[0]), bool)
+            carry, outs = jax.lax.scan(step, carry,
+                                       (_time_major(obs), active))
+            return _bank_major(outs), carry.ensemble
+
+        outs, final = jax.jit(scan_fn)(keys, observations)
         return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
                             outs.resampled, outs.diag, final)
 
@@ -180,20 +213,20 @@ class FilterBank:
         if b % p_bank:
             raise ValueError(f"bank size {b} not divisible by "
                              f"{p_bank} bank shards")
-        step = smc.make_distributed_sir_step(self.model, self.sir, self.dra,
-                                             self.axis_name)
-
-        def member(key, obs):
-            carry, outs = jax.lax.scan(
-                step, _shard_carry(key, self.model, self.axis_name, c, n),
-                obs)
-            return outs, carry.ensemble
+        step = make_sharded_bank_step(self.model, self.sir, self.dra,
+                                      self.axis_name)
 
         def shard_fn(keys, obs):
-            # vmap over this shard's bank members; collectives inside the
-            # step batch over the member axis (one launch per collective,
-            # not one per member)
-            return jax.vmap(member)(keys, obs)
+            # scan over frames of the vmapped per-frame step; collectives
+            # inside the step batch over the member axis (one launch per
+            # collective, not one per member)
+            carry = jax.vmap(lambda k: _shard_carry(
+                k, self.model, self.axis_name, c, n))(keys)
+            k_frames = jax.tree_util.tree_leaves(obs)[0].shape[1]
+            active = jnp.ones((k_frames, jnp.shape(keys)[0]), bool)
+            carry, outs = jax.lax.scan(step, carry,
+                                       (_time_major(obs), active))
+            return _bank_major(outs), carry.ensemble
 
         bank = P(self.bank_axis) if self.bank_axis else P()
         spec_particles = P(self.bank_axis, self.axis_name)
@@ -210,6 +243,58 @@ class FilterBank:
         outs, final = jax.jit(fn)(keys, observations)
         return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
                             outs.resampled, outs.diag, final)
+
+
+# ---------------------------------------------------------------------------
+# The single-frame bank step (DESIGN.md §11.1) — carry-in/carry-out over one
+# frame for B slots at once.  ``FilterBank.run`` scans it with all slots
+# active; ``repro.serve.sessions`` holds it resident and flips the mask.
+# ---------------------------------------------------------------------------
+
+def make_bank_step(model: smc.StateSpaceModel, sir: smc.SIRConfig):
+    """Build the single-device bank step.
+
+    Returns ``step(carry, (observations, active)) -> (carry, StepOutput)``
+    where ``carry`` is a ``smc.SIRCarry`` whose leaves carry a leading
+    slot dim ``B``, ``observations`` is one frame per slot ``(B, ...)``,
+    and ``active`` is a ``(B,)`` bool mask.  Inactive slots keep their
+    carry bitwise frozen and emit zeroed outputs
+    (``smc.make_masked_step``); active slots reproduce the standalone
+    ``make_sir_step`` bitwise.
+    """
+    return jax.vmap(smc.make_masked_step(smc.make_sir_step(model, sir)))
+
+
+def make_sharded_bank_step(model: smc.StateSpaceModel, sir: smc.SIRConfig,
+                           dra: dist.DRAConfig, axis_name: str):
+    """Per-shard bank step: the distributed SIR step (collectives over
+    ``axis_name``) vmapped over the slot axis with the same per-slot
+    masking as ``make_bank_step``.  Must run inside ``shard_map``.
+    """
+    return jax.vmap(smc.make_masked_step(
+        smc.make_distributed_sir_step(model, sir, dra, axis_name)))
+
+
+def member_carry(key: Array, model: smc.StateSpaceModel,
+                 sir: smc.SIRConfig) -> smc.SIRCarry:
+    """Fresh single-device carry for one slot — exactly the
+    ``smc.run_sir`` initialization (split into init + run streams, draw a
+    uniformly weighted ensemble), so a slot attached with ``key``
+    continues the same trajectory the standalone filter would."""
+    k_init, k_run = jax.random.split(key)
+    ens = particles.init_ensemble(k_init, model.init_sampler,
+                                  sir.n_particles)
+    return smc.SIRCarry(k_run, ens)
+
+
+def _time_major(obs: Any) -> Any:
+    """(B, K, ...) observation streams → (K, B, ...) for the frame scan."""
+    return jax.tree_util.tree_map(lambda x: jnp.moveaxis(x, 0, 1), obs)
+
+
+def _bank_major(outs: Any) -> Any:
+    """(K, B, ...) scanned step outputs → (B, K, ...) results."""
+    return jax.tree_util.tree_map(lambda x: jnp.moveaxis(x, 0, 1), outs)
 
 
 def _tiled_observations(dom: domain_mod.DomainSpec, observations: Any):

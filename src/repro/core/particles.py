@@ -45,9 +45,11 @@ class ParticleEnsemble:
 
     @property
     def capacity(self) -> int:
+        """Static slot count ``N`` (the leading dim of every leaf)."""
         return self.log_weights.shape[0]
 
     def replace(self, **kw) -> "ParticleEnsemble":
+        """Functional field update (``dataclasses.replace`` shorthand)."""
         return dataclasses.replace(self, **kw)
 
 
@@ -112,11 +114,20 @@ def effective_sample_size(log_weights: Array, counts: Array | None = None) -> Ar
 
 
 def weighted_mean(ensemble: ParticleEnsemble) -> Any:
-    """MMSE state estimate (paper §II): E[x] under the weighted ensemble."""
+    """MMSE state estimate (paper §II): E[x] under the weighted ensemble.
+
+    Computed as an explicit multiply + sum over the particle axis rather
+    than ``tensordot``: XLA lowers the elementwise form to the same
+    reduction order inside and outside ``vmap``, which is what lets a
+    resident bank slot reproduce the standalone filter's estimates
+    *bitwise* (DESIGN.md §11.2; a dot_general picks a different batched
+    reduction, observed off by 1 ulp).
+    """
     w = normalized_weights(ensemble.log_weights, ensemble.counts)
 
     def _mean(x):
-        return jnp.tensordot(w.astype(x.dtype), x, axes=1)
+        wx = jnp.reshape(w.astype(x.dtype), w.shape + (1,) * (x.ndim - 1))
+        return jnp.sum(wx * x, axis=0)
 
     return jax.tree_util.tree_map(_mean, ensemble.state)
 

@@ -62,6 +62,17 @@ class StateSpaceModel:
 
 @dataclasses.dataclass(frozen=True)
 class SIRConfig:
+    """SIR filter knobs (paper Alg. 1).
+
+    Attributes:
+      n_particles: global particle count ``N`` (distributed runs split it
+        into ``N / P`` slots per shard).
+      resampler: key into ``repro.core.resampling.RESAMPLERS``
+        (``systematic`` / ``stratified`` / ``multinomial`` / ``residual``).
+      ess_frac: resample when ``N_eff < ess_frac * N`` (Alg. 1 line 15).
+      always_resample: resample every frame regardless of ESS.
+    """
+
     n_particles: int = 4096
     resampler: str = "systematic"
     ess_frac: float = 0.5           # resample when N_eff < ess_frac * N
@@ -69,11 +80,17 @@ class SIRConfig:
 
 
 class SIRCarry(NamedTuple):
+    """Scan carry of every SIR step: PRNG key + the particle ensemble."""
+
     key: Array
     ensemble: ParticleEnsemble
 
 
 class StepOutput(NamedTuple):
+    """Per-frame outputs of one SIR step (leading dims follow the caller:
+    ``(...)`` single filter, ``(B, ...)`` bank, ``(K, ...)`` after scan).
+    """
+
     estimate: Any        # MMSE state estimate (paper §II)
     ess: Array           # global effective sample size
     log_marginal: Array  # running log p(Z^k) increment
@@ -82,6 +99,8 @@ class StepOutput(NamedTuple):
 
 
 class ResampleDecision(NamedTuple):
+    """Outcome of ``ess_resample`` — Alg. 1 lines 15–18 in one record."""
+
     ancestors: Array     # (N,) — identity permutation when not resampled
     ess: Array           # N_eff before resampling
     log_z: Array         # logsumexp of the incoming weights
@@ -116,6 +135,13 @@ def ess_resample(key: Array, log_weights: Array, *, ess_frac: float,
 # ---------------------------------------------------------------------------
 
 def make_sir_step(model: StateSpaceModel, cfg: SIRConfig):
+    """Build the single-device SIR step (Alg. 1 lines 5–18).
+
+    Returns ``step(carry: SIRCarry, observation) -> (SIRCarry, StepOutput)``
+    suitable for ``jax.lax.scan`` over a frame stack; the reference
+    semantics every other execution path (bank, distributed, resident
+    sessions) is pinned against.
+    """
     n = cfg.n_particles
 
     def step(carry: SIRCarry, observation):
@@ -235,3 +261,47 @@ def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
         return SIRCarry(key, ens), out
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# Per-slot masking (resident banks, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def neutral_output(out: StepOutput, active: Array) -> StepOutput:
+    """Zero a step's outputs wherever ``active`` is False.
+
+    Masked slots contribute *nothing* to estimates / ESS / log-marginal /
+    diagnostics: every leaf is ``where(active, leaf, 0)`` (``resampled``
+    becomes False).  ``active`` broadcasts against scalar-per-slot leaves.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jnp.where(active, x, jnp.zeros_like(x)), out)
+
+
+def make_masked_step(step):
+    """Wrap a SIR step with a per-slot activity gate (DESIGN.md §11.1).
+
+    ``masked(carry, (observation, active))`` runs ``step`` unconditionally
+    — identical ops, identical shapes, so the SPMD/compiled schedule never
+    depends on membership — then *selects*: an active slot takes the new
+    carry and real outputs, an inactive slot keeps its carry (key AND
+    ensemble) bit-for-bit frozen and emits ``neutral_output`` zeros.
+    This is what lets a resident ``FilterBank`` keep one jitted program
+    while members attach and detach (zero retraces under churn): only the
+    *values* of the ``active`` vector change, never a shape.
+
+    ``active`` is a scalar bool per slot; vmap over the slot axis to gate
+    a whole bank.  The frozen-carry select means a slot stepped only on
+    its own frames reproduces the standalone filter bitwise (the
+    estimate's reduction order is vmap-stable by construction, see
+    ``particles.weighted_mean``).
+    """
+
+    def masked(carry: SIRCarry, xs):
+        observation, active = xs
+        new_carry, out = step(carry, observation)
+        keep = lambda new, old: jnp.where(active, new, old)  # noqa: E731
+        carry = jax.tree_util.tree_map(keep, new_carry, carry)
+        return carry, neutral_output(out, active)
+
+    return masked

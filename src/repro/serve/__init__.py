@@ -1,4 +1,9 @@
+"""Serving layer: batched LM generation, SMC particle decoding, and the
+resident particle-filter session engine (``repro.serve.sessions``)."""
 from repro.serve.engine import generate
+from repro.serve.sessions import (ParticleSessionServer, SessionHandle,
+                                  SuspendedSession)
 from repro.serve.smc_decode import SMCDecodeConfig, smc_decode
 
-__all__ = ["generate", "smc_decode", "SMCDecodeConfig"]
+__all__ = ["generate", "smc_decode", "SMCDecodeConfig",
+           "ParticleSessionServer", "SessionHandle", "SuspendedSession"]

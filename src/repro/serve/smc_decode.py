@@ -37,6 +37,10 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class SMCDecodeConfig:
+    """SMC decoding knobs: K particles per prompt, proposal temperature
+    τ (τ=1 ⇒ proposal == target ⇒ uniform weights), and the shared
+    ESS-triggered resampling decision (``smc.ess_resample``)."""
+
     n_particles: int = 8         # K hypotheses per prompt
     steps: int = 32
     proposal_temperature: float = 1.5

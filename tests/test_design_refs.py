@@ -1,6 +1,9 @@
-"""Every `DESIGN.md §<n>` citation in the source must resolve to a real
-section heading — the contract document may not dangle (it did once:
-10+ files cited sections that had never been written)."""
+"""Documentation may not rot: every `DESIGN.md §<n>` citation in the
+source must resolve to a real section heading (it dangled once: 10+
+files cited sections that had never been written), and every
+module/symbol/test named by docs/paper_map.md must still exist — a
+renamed symbol fails here before the map can lie to a reader."""
+import importlib
 import pathlib
 import re
 
@@ -26,3 +29,81 @@ def test_every_design_reference_resolves():
                 if ref.rstrip(".") not in headings:
                     missing.append((str(f.relative_to(ROOT)), ref))
     assert not missing, f"dangling DESIGN.md references: {missing}"
+
+
+# ---------------------------------------------------------------------------
+# docs/paper_map.md — the paper→code table is a checked artifact
+# ---------------------------------------------------------------------------
+
+CELL = re.compile(r"`([^`]+)`")
+
+
+def _map_rows():
+    """Parse (module, symbols, pins) from every data row of the map's
+    tables.  Row contract (documented in the file): column 2 holds ONE
+    backticked dotted module, column 3 backticked attribute names on it,
+    column 4 backticked repo-relative paths.  A data row that violates
+    the contract raises — a malformed row must fail CI, not silently
+    drop out of validation."""
+    text = (ROOT / "docs" / "paper_map.md").read_text()
+    rows, malformed = [], []
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not (stripped.startswith("|") and stripped.endswith("|")):
+            continue                                   # not a table row
+        cells = [c.strip() for c in stripped.strip("|").split("|")]
+        if len(cells) != 4:
+            malformed.append((line, "expected 4 columns"))
+            continue
+        if cells[1] == "Module" or \
+                (cells[1] and set(cells[1]) <= {"-", ":"}):
+            continue          # header / separator (never blank in either)
+        mods = CELL.findall(cells[1])
+        if len(mods) != 1 or not mods[0].startswith("repro."):
+            malformed.append((line, "Module cell must hold exactly one "
+                                    "backticked repro.* module"))
+            continue
+        syms, pins = CELL.findall(cells[2]), CELL.findall(cells[3])
+        if not syms or not pins:
+            malformed.append((line, "symbols/pins cells must be "
+                                    "backticked and non-empty"))
+            continue
+        rows.append((mods[0], syms, pins))
+    assert not malformed, \
+        f"paper_map.md rows violate the format contract: {malformed}"
+    return rows
+
+
+def test_paper_map_has_rows():
+    rows = _map_rows()
+    assert len(rows) >= 20, f"paper map looks truncated: {len(rows)} rows"
+    # the headline paper concepts must all appear
+    text = (ROOT / "docs" / "paper_map.md").read_text()
+    for concept in ("Alg. 1", "§III", "§IV", "§V", "§VI", "§VII",
+                    "domain decomposition", "RNA", "RPA", "ARNA"):
+        assert concept in text, f"paper map lost the {concept!r} row"
+
+
+def test_paper_map_modules_and_symbols_resolve():
+    missing = []
+    for mod_name, symbols, _ in _map_rows():
+        try:
+            mod = importlib.import_module(mod_name)
+        except ImportError as e:
+            missing.append((mod_name, f"import failed: {e}"))
+            continue
+        for sym in symbols:
+            if not hasattr(mod, sym):
+                missing.append((mod_name, sym))
+    assert not missing, f"paper_map.md names dead symbols: {missing}"
+
+
+def test_paper_map_test_pins_exist():
+    missing = [p for _, _, pins in _map_rows() for p in pins
+               if not (ROOT / p).exists()]
+    assert not missing, f"paper_map.md pins missing test files: {missing}"
+
+
+def test_paper_map_linked_from_readme():
+    assert "docs/paper_map.md" in (ROOT / "README.md").read_text(), \
+        "README must link the paper→code map"

@@ -1,0 +1,53 @@
+"""Doc-coverage floor on the public API of repro.core + repro.serve.
+
+Dependency-free mirror of the ``interrogate`` gate CI's docs job runs
+(same counting rules as the [tool.interrogate] config in pyproject.toml:
+public modules/classes/functions/methods, nested and private defs
+ignored), so the floor also holds in environments without the dev extra
+— doc rot fails the tier-1 lane, not just the docs lane.
+"""
+import ast
+import pathlib
+
+import pytest
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+FLOOR = 0.90
+
+
+def _public_defs(path: pathlib.Path):
+    """Yield (qualname, has_docstring) for the module and every public
+    class/function/method — nested-in-function defs and ``_private``
+    names excluded (interrogate: ignore-nested-functions,
+    ignore-private, ignore-semiprivate, ignore-magic)."""
+    tree = ast.parse(path.read_text())
+    yield f"{path.name}", bool(ast.get_docstring(tree))
+
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                if child.name.startswith("_"):
+                    continue
+                yield f"{path.name}:{prefix}{child.name}", \
+                    bool(ast.get_docstring(child))
+                if isinstance(child, ast.ClassDef):    # methods, not nested
+                    yield from walk(child, f"{prefix}{child.name}.")
+
+    yield from walk(tree, "")
+
+
+def _coverage(pkg: str):
+    defs = [d for f in sorted((SRC / pkg).rglob("*.py"))
+            for d in _public_defs(f)]
+    documented = [name for name, ok in defs if ok]
+    missing = [name for name, ok in defs if not ok]
+    return len(documented) / len(defs), missing
+
+
+@pytest.mark.parametrize("pkg", ["repro/core", "repro/serve"])
+def test_public_api_doc_coverage(pkg):
+    cov, missing = _coverage(pkg)
+    assert cov >= FLOOR, (
+        f"{pkg} public-API docstring coverage {cov:.1%} < {FLOOR:.0%}; "
+        f"undocumented: {missing}")

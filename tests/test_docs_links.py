@@ -1,0 +1,55 @@
+"""Markdown link integrity over README / DESIGN / docs (the same check
+CI's docs job runs): every relative link must resolve to a real file,
+and every in-page anchor to a real heading.  External (http) links are
+out of scope — CI environments without network must stay green."""
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#+\s+(.*)$", re.M)
+
+
+def _docs():
+    files = [ROOT / "README.md", ROOT / "DESIGN.md", ROOT / "ROADMAP.md",
+             ROOT / "CHANGES.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug (approximate, good enough to catch rot)."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- §.]", "", h)
+    return re.sub(r"[\s§.]+", "-", h).strip("-")
+
+
+def test_relative_links_resolve():
+    broken = []
+    for doc in _docs():
+        for target in LINK.findall(doc.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path, _, anchor = target.partition("#")
+            dest = (doc.parent / path).resolve() if path else doc
+            if path and not dest.exists():
+                broken.append((doc.name, target))
+            elif anchor and dest.suffix == ".md" and dest.exists():
+                slugs = {_slug(h) for h in HEADING.findall(dest.read_text())}
+                if _slug(anchor) not in slugs:
+                    broken.append((doc.name, target, "anchor"))
+    assert not broken, f"broken markdown links: {broken}"
+
+
+def test_docs_reference_real_tests_and_benches():
+    """Paths like tests/..., benchmarks/..., examples/... quoted in the
+    docs must exist — the READMEs steer readers by file path."""
+    pat = re.compile(r"`((?:tests|benchmarks|examples|docs|src)/[\w/.\-]+"
+                     r"\.(?:py|md|json))`")
+    missing = []
+    for doc in _docs():
+        for rel in pat.findall(doc.read_text()):
+            if not (ROOT / rel).exists():
+                missing.append((doc.name, rel))
+    assert not missing, f"docs cite missing files: {missing}"

@@ -1,0 +1,420 @@
+"""Resident FilterBank sessions (repro.serve.sessions): bitwise parity
+under churn, zero retraces across membership changes, and mesh-elastic
+suspend/resume through repro.checkpoint.store.
+
+The headline contract (DESIGN.md §11): a session stepped through
+``ParticleSessionServer`` — while other slots attach, stream, and detach
+— produces bitwise the same ``FilterResult`` trajectory as a standalone
+``ParallelParticleFilter.run`` with the same key/observations, and the
+resident step program is traced exactly once no matter the churn.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SIRConfig, ParallelParticleFilter
+from repro.serve import ParticleSessionServer, SuspendedSession
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# one source of truth for the linear-Gaussian benchmark model: the golden
+# generator (which documents it as shared with tests/test_parity.py)
+sys.path.insert(0, os.path.join(REPO, "tests", "golden"))
+try:
+    import generate_session
+    from generate_session import A, H, Q, R0, lg_model
+finally:
+    sys.path.pop(0)
+
+
+def frames(seed: int, k: int) -> np.ndarray:
+    return np.asarray(jax.random.normal(jax.random.key(seed), (k,)),
+                      np.float32) * 0.8
+
+
+def standalone(key, zs, n=128, ess_frac=0.6):
+    return ParallelParticleFilter(
+        model=lg_model(),
+        sir=SIRConfig(n_particles=n, ess_frac=ess_frac)).run(
+            key, jnp.asarray(zs))
+
+
+def assert_trajectory_bitwise(res, ref) -> None:
+    """Every FilterResult field identical to the last bit."""
+    np.testing.assert_array_equal(np.asarray(res.estimates),
+                                  np.asarray(ref.estimates))
+    np.testing.assert_array_equal(np.asarray(res.ess), np.asarray(ref.ess))
+    np.testing.assert_array_equal(np.asarray(res.log_marginal),
+                                  np.asarray(ref.log_marginal))
+    np.testing.assert_array_equal(np.asarray(res.resampled),
+                                  np.asarray(ref.resampled))
+    np.testing.assert_array_equal(np.asarray(res.final.state),
+                                  np.asarray(ref.final.state))
+    np.testing.assert_array_equal(np.asarray(res.final.log_weights),
+                                  np.asarray(ref.final.log_weights))
+
+
+# ---------------------------------------------------------------------------
+# Parity under churn
+# ---------------------------------------------------------------------------
+
+def test_session_parity_under_churn_bitwise():
+    """A session streamed one frame at a time — while neighbours attach,
+    stream garbage, detach, and a slot is recycled — is bitwise the
+    standalone filter."""
+    model = lg_model()
+    sir = SIRConfig(n_particles=128, ess_frac=0.6)
+    zs = frames(7, 24)
+    key = jax.random.key(42)
+    ref = standalone(key, zs)
+
+    srv = ParticleSessionServer(model=model, sir=sir, capacity=4)
+    h = srv.attach(key)
+    other = srv.attach(jax.random.key(5))
+    for t in range(24):
+        srv.submit(h, zs[t])
+        if other is not None:
+            srv.submit(other, np.float32(0.1))
+        if t == 10:
+            srv.detach(other)
+            other = None
+        if t == 15:                      # recycles the freed slot
+            other = srv.attach(jax.random.key(9))
+        srv.step()
+    assert_trajectory_bitwise(srv.result(h), ref)
+
+
+def test_churn_schedules_property():
+    """Randomized churn schedules (attach/detach/burst-submit patterns on
+    the other slots) never perturb the pinned session — a property sweep
+    over seeds; hypothesis-style without the dependency."""
+    model = lg_model()
+    sir = SIRConfig(n_particles=64, ess_frac=0.5)
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        zs = frames(100 + seed, 12)
+        key = jax.random.key(2000 + seed)
+        ref = standalone(key, zs, n=64, ess_frac=0.5)
+
+        srv = ParticleSessionServer(model=model, sir=sir, capacity=3)
+        h = srv.attach(key)
+        others = []
+        for t in range(12):
+            srv.submit(h, zs[t])
+            action = rng.integers(0, 4)
+            if action == 0 and len(others) < 2:
+                others.append(srv.attach(jax.random.key(int(
+                    rng.integers(0, 1 << 30)))))
+            elif action == 1 and others:
+                srv.detach(others.pop(rng.integers(0, len(others))))
+            for o in others:            # bursty neighbour traffic
+                for _ in range(int(rng.integers(0, 3))):
+                    srv.submit(o, np.float32(rng.normal()))
+            srv.step()
+        assert_trajectory_bitwise(srv.result(h), ref)
+        assert srv.step_traces == 1
+
+
+def test_interleaved_sessions_both_match():
+    """Two live sessions stepped in the same program both reproduce their
+    standalone runs (no cross-slot coupling through the masked bank)."""
+    sir = SIRConfig(n_particles=64, ess_frac=0.5)
+    za, zb = frames(1, 10), frames(2, 10)
+    ka, kb = jax.random.key(11), jax.random.key(22)
+    srv = ParticleSessionServer(model=lg_model(), sir=sir, capacity=2)
+    ha, hb = srv.attach(ka), srv.attach(kb)
+    for t in range(10):
+        srv.submit(ha, za[t])
+        srv.submit(hb, zb[t])
+        srv.step()
+    assert_trajectory_bitwise(srv.result(ha),
+                              standalone(ka, za, n=64, ess_frac=0.5))
+    assert_trajectory_bitwise(srv.result(hb),
+                              standalone(kb, zb, n=64, ess_frac=0.5))
+
+
+def test_session_golden():
+    """The scripted churn run of tests/golden/generate_session.py stays on
+    its committed trajectory (regenerate only for deliberate changes)."""
+    with open(os.path.join(REPO, "tests", "golden",
+                           "session_parity.json")) as f:
+        g = json.load(f)["session"]
+    srv, h, _ = generate_session.churn_run()
+    res = srv.result(h)
+    np.testing.assert_allclose(np.asarray(res.estimates),
+                               np.asarray(g["estimates"]), atol=1e-5,
+                               rtol=0)
+    np.testing.assert_allclose(np.asarray(res.ess), np.asarray(g["ess"]),
+                               atol=1e-3, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.log_marginal),
+                               np.asarray(g["log_marginal"]), atol=1e-5,
+                               rtol=0)
+    np.testing.assert_array_equal(np.asarray(res.resampled).astype(int),
+                                  np.asarray(g["resampled"]))
+
+
+# ---------------------------------------------------------------------------
+# Zero retraces + slot lifecycle
+# ---------------------------------------------------------------------------
+
+def test_zero_retraces_under_churn():
+    """Membership churn (attach/detach/slot recycling, varying active
+    counts) never recompiles the resident step."""
+    sir = SIRConfig(n_particles=32, ess_frac=0.5)
+    srv = ParticleSessionServer(model=lg_model(), sir=sir, capacity=4)
+    handles = [srv.attach(jax.random.key(i)) for i in range(4)]
+    for t in range(20):
+        for i, h in enumerate(handles):
+            if h is not None and (t + i) % 3:      # ragged submission
+                srv.submit(h, np.float32(0.1 * i))
+        if t == 5:
+            srv.detach(handles[1])
+            handles[1] = None
+        if t == 9:
+            srv.detach(handles[3])
+            handles[3] = None
+        if t == 12:
+            handles[1] = srv.attach(jax.random.key(100))
+        srv.step()
+    assert srv.step_traces == 1
+    cache = srv.jit_cache_size()
+    assert cache is None or cache == 1
+
+
+def test_step_with_nothing_pending_is_free():
+    srv = ParticleSessionServer(model=lg_model(),
+                                sir=SIRConfig(n_particles=16), capacity=2)
+    assert srv.step() == 0
+    assert srv.step_traces == 0        # never even traced
+
+
+def test_slot_allocator_full_and_recycle():
+    sir = SIRConfig(n_particles=16)
+    srv = ParticleSessionServer(model=lg_model(), sir=sir, capacity=2)
+    a = srv.attach(jax.random.key(0))
+    b = srv.attach(jax.random.key(1))
+    with pytest.raises(RuntimeError, match="server full"):
+        srv.attach(jax.random.key(2))
+    srv.detach(a)
+    c = srv.attach(jax.random.key(3))
+    assert c.slot == a.slot            # lowest freed slot is reused
+    with pytest.raises(KeyError):
+        srv.submit(a, np.float32(0.0))     # stale handle rejected
+    assert srv.occupancy == 2
+    srv.detach(b)
+    srv.detach(c)
+    assert srv.occupancy == 0
+
+
+def test_submit_copies_reused_capture_buffer():
+    """Streaming clients reuse one frame buffer; queued frames must not
+    alias it (submit takes an owned copy)."""
+    sir = SIRConfig(n_particles=64, ess_frac=0.5)
+    zs = frames(5, 8)
+    key = jax.random.key(21)
+    ref = standalone(key, zs, n=64, ess_frac=0.5)
+    srv = ParticleSessionServer(model=lg_model(), sir=sir, capacity=1)
+    h = srv.attach(key)
+    buf = np.zeros((), np.float32)
+    for t in range(8):                 # enqueue ALL frames via one buffer
+        buf[...] = zs[t]
+        srv.submit(h, buf)
+    assert_trajectory_bitwise(srv.result(h), ref)
+
+
+def test_frame_shape_mismatch_rejected():
+    srv = ParticleSessionServer(model=lg_model(),
+                                sir=SIRConfig(n_particles=16), capacity=1)
+    h = srv.attach(jax.random.key(0))
+    srv.submit(h, np.float32(0.0))
+    with pytest.raises(ValueError, match="does not match"):
+        srv.submit(h, np.zeros((3,), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Suspend / resume (mesh-elastic checkpoint round-trip, DESIGN.md §11.4)
+# ---------------------------------------------------------------------------
+
+def test_suspend_resume_same_server_bitwise():
+    sir = SIRConfig(n_particles=64, ess_frac=0.5)
+    zs = frames(3, 20)
+    key = jax.random.key(8)
+    ref = standalone(key, zs, n=64, ess_frac=0.5)
+
+    srv = ParticleSessionServer(model=lg_model(), sir=sir, capacity=2)
+    h = srv.attach(key)
+    for t in range(9):
+        srv.submit(h, zs[t])
+    sus = srv.suspend(h)               # drains the queue first
+    assert sus.frames_done == 9
+    assert srv.occupancy == 0          # slot freed
+    h2 = srv.resume(sus)
+    for t in range(9, 20):
+        srv.submit(h2, zs[t])
+    res = srv.result(h2)
+    assert np.asarray(res.estimates).shape[0] == 20   # full history
+    assert_trajectory_bitwise(res, ref)
+
+
+def test_suspend_to_directory_resume_other_capacity_bitwise():
+    """ParticleEnsemble + PRNG carry round-trip through checkpoint/store
+    onto a server with a DIFFERENT capacity — continuation is bitwise."""
+    sir = SIRConfig(n_particles=64, ess_frac=0.5)
+    zs = frames(4, 16)
+    key = jax.random.key(9)
+    ref = standalone(key, zs, n=64, ess_frac=0.5)
+
+    srv = ParticleSessionServer(model=lg_model(), sir=sir, capacity=4)
+    h = srv.attach(key)
+    for t in range(7):
+        srv.submit(h, zs[t])
+    with tempfile.TemporaryDirectory() as d:
+        srv.suspend(h, directory=d)
+        srv2 = ParticleSessionServer(model=lg_model(), sir=sir, capacity=1)
+        h2 = srv2.resume_from(d)
+        for t in range(7, 16):
+            srv2.submit(h2, zs[t])
+        assert_trajectory_bitwise(srv2.result(h2), ref)
+
+
+def test_suspended_payload_is_host_side():
+    """The suspension payload is pure NumPy (no device arrays, no mesh
+    layout) — what makes it process- and mesh-portable."""
+    srv = ParticleSessionServer(model=lg_model(),
+                                sir=SIRConfig(n_particles=32), capacity=1)
+    h = srv.attach(jax.random.key(0))
+    srv.submit(h, np.float32(0.3))
+    sus = srv.suspend(h)
+    for leaf in jax.tree_util.tree_leaves(sus.as_tree()):
+        assert isinstance(leaf, np.ndarray), type(leaf)
+
+
+def test_resume_wrong_particle_count_rejected():
+    srv = ParticleSessionServer(model=lg_model(),
+                                sir=SIRConfig(n_particles=32), capacity=1)
+    h = srv.attach(jax.random.key(0))
+    srv.submit(h, np.float32(0.0))
+    sus = srv.suspend(h)
+    srv2 = ParticleSessionServer(model=lg_model(),
+                                 sir=SIRConfig(n_particles=64), capacity=1)
+    with pytest.raises(ValueError, match="particles"):
+        srv2.resume(sus)
+
+
+def test_suspend_resume_across_mesh_sizes_bitwise():
+    """Elastic re-mesh (the pattern of test_train.py's reshard test):
+    suspend on the single-device server, restore in a subprocess whose
+    server shards its bank over 8 simulated devices, continue — the
+    printed continuation must be bitwise the uninterrupted local run."""
+    sir = SIRConfig(n_particles=64, ess_frac=0.5)
+    zs = frames(6, 12)
+    key = jax.random.key(13)
+    ref = standalone(key, zs, n=64, ess_frac=0.5)
+
+    srv = ParticleSessionServer(model=lg_model(), sir=sir, capacity=2)
+    h = srv.attach(key)
+    for t in range(6):
+        srv.submit(h, zs[t])
+    zs_list = [float(z) for z in zs]
+    with tempfile.TemporaryDirectory() as d:
+        srv.suspend(h, directory=d)
+        code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import SIRConfig, runtime
+from repro.core.smc import StateSpaceModel
+from repro.serve import ParticleSessionServer
+
+A, Q, H, R0 = {A}, {Q}, {H}, {R0}
+def lg_model():
+    def init_sampler(key, n): return jax.random.normal(key, (n, 1)) * 2.0
+    def dynamics_sample(key, s):
+        return A * s + jnp.sqrt(Q) * jax.random.normal(key, s.shape)
+    def log_likelihood(s, z): return -0.5 * (z - H * s[:, 0]) ** 2 / R0
+    return StateSpaceModel(init_sampler, dynamics_sample, log_likelihood,
+                           state_dim=1)
+
+mesh = runtime.make_mesh((8,), ("bank",))
+srv = ParticleSessionServer(model=lg_model(),
+                            sir=SIRConfig(n_particles=64, ess_frac=0.5),
+                            capacity=8, mesh=mesh)
+h = srv.resume_from({d!r})
+zs = np.asarray({zs_list!r}, np.float32)
+other = None
+for t in range(6, 12):
+    srv.submit(h, zs[t])
+    if other is None:                         # churn on the mesh path too
+        other = srv.attach(jax.random.key(1000 + t))
+    else:
+        srv.detach(other); other = None
+    if other is not None:
+        srv.submit(other, np.float32(0.5))
+    srv.step()
+res = srv.result(h)
+# compile counts must be churn-invariant on the mesh path: 1 trace,
+# <= 2 executables (layout-metadata provenance), never growing
+assert srv.step_traces == 1, srv.step_traces
+cache = srv.jit_cache_size()
+assert cache is None or cache <= 2, cache
+print("EST", repr(np.asarray(res.estimates).tobytes().hex()))
+print("FINAL", repr(np.asarray(res.final.state).tobytes().hex()))
+"""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env.pop("XLA_FLAGS", None)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, timeout=600,
+                             env=env)
+        assert out.returncode == 0, out.stderr[-3000:]
+    got = dict(line.split(" ", 1) for line in out.stdout.strip().splitlines()
+               if line.startswith(("EST", "FINAL")))
+    assert got["EST"].strip("'") == np.asarray(
+        ref.estimates).tobytes().hex()
+    assert got["FINAL"].strip("'") == np.asarray(
+        ref.final.state).tobytes().hex()
+
+
+# ---------------------------------------------------------------------------
+# Masked-slot semantics (the smc layer the server rides on)
+# ---------------------------------------------------------------------------
+
+def test_masked_step_freezes_carry_and_zeroes_outputs():
+    from repro.core import member_carry, particles
+    from repro.core.smc import make_masked_step, make_sir_step
+
+    model = lg_model()
+    sir = SIRConfig(n_particles=32, ess_frac=0.5)
+    step = make_masked_step(make_sir_step(model, sir))
+    carry = member_carry(jax.random.key(0), model, sir)
+
+    off_carry, off_out = jax.jit(step)(carry, (jnp.float32(0.7),
+                                               jnp.asarray(False)))
+    for a, b in zip(jax.tree_util.tree_leaves(off_carry),
+                    jax.tree_util.tree_leaves(carry)):
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(a) if a.dtype == carry.key.dtype
+                       else a),
+            np.asarray(jax.random.key_data(b) if b.dtype == carry.key.dtype
+                       else b))
+    for leaf in jax.tree_util.tree_leaves(off_out):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.zeros_like(np.asarray(leaf)))
+
+    on_carry, on_out = jax.jit(step)(carry, (jnp.float32(0.7),
+                                             jnp.asarray(True)))
+    ref_carry, ref_out = jax.jit(make_sir_step(model, sir))(carry,
+                                                            jnp.float32(0.7))
+    np.testing.assert_array_equal(np.asarray(on_out.estimate),
+                                  np.asarray(ref_out.estimate))
+    np.testing.assert_array_equal(
+        np.asarray(on_carry.ensemble.log_weights),
+        np.asarray(ref_carry.ensemble.log_weights))
+    assert float(particles.logical_size(on_carry.ensemble)) == 32
