@@ -1,0 +1,133 @@
+"""Generic-SSM throughput baseline → BENCH_ssm.json.
+
+Particles/second of the protocol-dispatched SIR step for each shipped
+model family (linear-Gaussian ``cv2d``, stochastic volatility,
+Lorenz-96) at N ∈ {1e4, 1e5, 1e6}, single filter vs ``FilterBank``
+B = 8 — the first perf trajectory for non-tracking workloads, so
+future model-layer PRs have a recorded curve to regress against
+(compare particles/s, not seconds — CI machines vary).
+
+What the numbers mean: the three families bound the per-particle cost
+spectrum — lgssm is two small matmuls, stochvol a scalar recursion
+(cheapest), Lorenz-96 a 4-stage RK4 on a ring (dimension-tunable).
+Ideal FilterBank scaling keeps particles/s flat from B=1 to B=8 at
+equal total particle count; the recorded ratio is the baseline.
+
+``--smoke`` (or ``benchmarks.run ssm --smoke``) shrinks N and steps
+for CI and writes the gitignored BENCH_ssm.smoke.json instead.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEST = os.path.join(REPO, "BENCH_ssm.json")
+
+
+def _families():
+    from repro.models import ssm
+
+    return {
+        "lgssm_cv2d": ssm.oracle_configs()["cv2d"],
+        "stochvol": ssm.StochasticVolatilitySSM(),
+        "lorenz96_d8": ssm.Lorenz96SSM(dim=8),
+    }
+
+
+def _observations(model, steps):
+    import jax
+    import numpy as np
+    from repro.models import ssm
+
+    _, zs = ssm.simulate(jax.random.key(0), model, steps)
+    return np.asarray(zs)
+
+
+def single_filter(smoke: bool) -> list[dict]:
+    """jit(run_sir) particles/s per family per N."""
+    import jax
+    from repro.core import SIRConfig
+    from repro.core.smc import run_sir
+
+    ns = (10_000, 100_000) if smoke else (10_000, 100_000, 1_000_000)
+    steps = 4 if smoke else 8
+    rows = []
+    for name, model in _families().items():
+        zs = _observations(model, steps)
+        for n in ns:
+            cfg = SIRConfig(n_particles=n)
+            fn = jax.jit(lambda key, z, c=cfg, m=model: run_sir(
+                key, m, c, z)[1].estimate)
+            jax.block_until_ready(fn(jax.random.key(1), zs))   # compile+warm
+            t0 = time.time()
+            jax.block_until_ready(fn(jax.random.key(1), zs))
+            dt = time.time() - t0
+            rows.append({"family": name, "particles": n, "steps": steps,
+                         "seconds": dt,
+                         "particles_per_sec": n * steps / dt})
+    return rows
+
+
+def bank_filter(smoke: bool) -> list[dict]:
+    """FilterBank B=8 particles/s per family per N (per-member N)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import FilterBank, SIRConfig
+
+    b = 8
+    ns = (10_000,) if smoke else (10_000, 100_000, 1_000_000)
+    steps = 4 if smoke else 8
+    rows = []
+    for name, model in _families().items():
+        zs = _observations(model, steps)
+        obs = jnp.stack([jnp.asarray(zs)] * b)    # same stream per member,
+        keys = jnp.stack([jax.random.key(i) for i in range(b)])  # own RNG
+        for n in ns:
+            bank = FilterBank(model=model, sir=SIRConfig(n_particles=n))
+            jax.block_until_ready(bank.run(keys, obs).estimates)
+            t0 = time.time()
+            jax.block_until_ready(bank.run(keys, obs).estimates)
+            dt = time.time() - t0
+            rows.append({"family": name, "bank_size": b, "particles": n,
+                         "steps": steps, "seconds": dt,
+                         "particles_per_sec": b * n * steps / dt})
+    return rows
+
+
+def run() -> list[dict]:
+    """benchmarks.run entry point — writes BENCH_ssm.json (smoke runs
+    write the gitignored BENCH_ssm.smoke.json and never touch the
+    committed full-size baseline)."""
+    smoke = "--smoke" in sys.argv
+    single = single_filter(smoke)
+    bank = bank_filter(smoke)
+    dest = DEST.replace(".json", ".smoke.json") if smoke else DEST
+    with open(dest, "w") as f:
+        json.dump({"smoke": smoke, "single_filter": single,
+                   "bank_filter": bank}, f, indent=1)
+    rows = []
+    for r in single:
+        rows.append({
+            "name": f"ssm/{r['family']}_n{r['particles']}",
+            "us_per_call": r["seconds"] * 1e6,
+            "derived": f"{r['particles_per_sec']:.0f} particles/s",
+        })
+    for r in bank:
+        rows.append({
+            "name": f"ssm/{r['family']}_B{r['bank_size']}_n{r['particles']}",
+            "us_per_call": r["seconds"] * 1e6,
+            "derived": f"{r['particles_per_sec']:.0f} particles/s",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    _dest = (DEST.replace(".json", ".smoke.json")
+             if "--smoke" in sys.argv else DEST)
+    print(f"wrote {_dest}", file=sys.stderr)

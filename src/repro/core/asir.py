@@ -33,9 +33,19 @@ class ASIRConfig:
     i_max: float = 4.0
 
 
-def make_asir_model(base: StateSpaceModel, cfg: TrackingConfig,
+def make_asir_model(base, cfg: TrackingConfig,
                     asir: ASIRConfig) -> StateSpaceModel:
-    """Wrap a tracking model with the piecewise-constant likelihood."""
+    """Wrap a tracking model (any ``repro.models.ssm.StateSpaceModel``
+    with the tracking state layout) with the piecewise-constant
+    likelihood.  Returns a callable-bundle model that keeps ``base``'s
+    init/dynamics and swaps only the likelihood.
+
+    The wrapped model deliberately carries NO domain-decomposition
+    hooks, whatever ``base`` had: the lattice is evaluated against the
+    full frame and has no tile-local form, so composing ASIR with
+    ``ParallelParticleFilter(domain=...)`` raises the step builder's
+    missing-hooks error instead of silently reweighting with the
+    *exact* tile likelihood while claiming to approximate."""
     h, w = cfg.img_size
     g = asir.grid
     cell_y = h / g
@@ -69,4 +79,7 @@ def make_asir_model(base: StateSpaceModel, cfg: TrackingConfig,
                       .astype(jnp.int32), 0, asir.intensity_bins - 1)
         return table[iy, ix, ib]
 
-    return dataclasses.replace(base, log_likelihood=log_likelihood)
+    return StateSpaceModel(init_sampler=base.init,
+                           dynamics_sample=base.transition_sample,
+                           log_likelihood=log_likelihood,
+                           state_dim=base.state_dim)

@@ -8,6 +8,15 @@ ensemble)`` — ``ParticleEnsemble`` is the currency of the whole stack
 (collectives by ``axis_name``) to be wrapped in ``shard_map`` by
 ``repro.core.filters``.
 
+Every builder is parameterized by ANY implementation of the
+``repro.models.ssm.StateSpaceModel`` protocol (DESIGN.md §12): the core
+only calls ``init`` / ``transition_sample`` / ``observation_log_prob``
+(plus the optional spatial hooks for domain decomposition) and knows
+nothing about the observation modality.  The ``StateSpaceModel``
+dataclass below is the closure-style callable-bundle adapter for that
+protocol — the historical constructor, kept because closures are the
+lightest way to write a throwaway model.
+
 ``ess_resample`` is the one SIR resampling decision (Alg. 1 lines 15–18)
 shared by the single-device step, the ``FilterBank``, and SMC decoding
 (``repro.serve.smc_decode``): ESS check, conditional resample, identity
@@ -27,13 +36,25 @@ from repro.core import particles
 from repro.core import resampling
 from repro.core import runtime
 from repro.core.particles import ParticleEnsemble, effective_sample_size
+from repro.models.ssm import base as ssm_base
 
 Array = jax.Array
+
+# re-exported so `smc.domain_hooks` reads naturally at the call sites
+domain_hooks = ssm_base.domain_hooks
 
 
 @dataclasses.dataclass(frozen=True)
 class StateSpaceModel:
-    """Bootstrap-proposal state-space model (paper §II).
+    """Closure-style adapter for the ``repro.models.ssm.StateSpaceModel``
+    protocol (paper §II bootstrap-proposal models).
+
+    Bundle three callables and this class exposes them under the
+    protocol method names (``init`` / ``transition_sample`` /
+    ``observation_log_prob``) every filter driver consumes — the
+    lightest way to define a throwaway model; class-based models
+    (``repro.models.ssm`` families, ``repro.models.tracking.TrackingSSM``)
+    implement the protocol directly instead.
 
     All callables are batched over the leading particle axis.
 
@@ -58,6 +79,20 @@ class StateSpaceModel:
     state_dim: int = 5
     positions: Callable[..., Array] | None = None
     tile_log_likelihood: Callable[..., Array] | None = None
+
+    def init(self, key: Array, n: int) -> Any:
+        """Protocol ``init`` — delegates to ``init_sampler``."""
+        return self.init_sampler(key, n)
+
+    def transition_sample(self, key: Array, state: Any) -> Any:
+        """Protocol ``transition_sample`` — delegates to
+        ``dynamics_sample``."""
+        return self.dynamics_sample(key, state)
+
+    def observation_log_prob(self, state: Any, observation: Any) -> Array:
+        """Protocol ``observation_log_prob`` — delegates to
+        ``log_likelihood``."""
+        return self.log_likelihood(state, observation)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,11 +169,12 @@ def ess_resample(key: Array, log_weights: Array, *, ess_frac: float,
 # Single-device SIR (reference semantics for everything else)
 # ---------------------------------------------------------------------------
 
-def make_sir_step(model: StateSpaceModel, cfg: SIRConfig):
+def make_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig):
     """Build the single-device SIR step (Alg. 1 lines 5–18).
 
+    ``model`` is any ``repro.models.ssm.StateSpaceModel`` implementation.
     Returns ``step(carry: SIRCarry, observation) -> (SIRCarry, StepOutput)``
-    suitable for ``jax.lax.scan`` over a frame stack; the reference
+    suitable for ``jax.lax.scan`` over an observation stack; the reference
     semantics every other execution path (bank, distributed, resident
     sessions) is pinned against.
     """
@@ -147,9 +183,9 @@ def make_sir_step(model: StateSpaceModel, cfg: SIRConfig):
     def step(carry: SIRCarry, observation):
         key, ens = carry
         key, k_dyn, k_res = jax.random.split(key, 3)
-        ens = particles.advance(ens, k_dyn, model.dynamics_sample)
-        ens = particles.reweight(ens, model.log_likelihood(ens.state,
-                                                           observation))
+        ens = particles.advance(ens, k_dyn, model.transition_sample)
+        ens = particles.reweight(ens, model.observation_log_prob(ens.state,
+                                                                 observation))
         estimate = particles.weighted_mean(ens)
 
         dec = ess_resample(k_res, ens.log_weights, ess_frac=cfg.ess_frac,
@@ -169,11 +205,11 @@ def make_sir_step(model: StateSpaceModel, cfg: SIRConfig):
     return step
 
 
-def run_sir(key: Array, model: StateSpaceModel, cfg: SIRConfig,
+def run_sir(key: Array, model: ssm_base.StateSpaceModel, cfg: SIRConfig,
             observations: Any) -> tuple[SIRCarry, StepOutput]:
     """Run the filter over a stacked observation sequence."""
     k_init, k_run = jax.random.split(key)
-    ens = particles.init_ensemble(k_init, model.init_sampler, cfg.n_particles)
+    ens = particles.init_ensemble(k_init, model.init, cfg.n_particles)
     step = make_sir_step(model, cfg)
     carry, outs = jax.lax.scan(step, SIRCarry(k_run, ens), observations)
     return carry, outs
@@ -183,11 +219,12 @@ def run_sir(key: Array, model: StateSpaceModel, cfg: SIRConfig,
 # Distributed (per-shard) SIR step
 # ---------------------------------------------------------------------------
 
-def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
+def make_distributed_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig,
                               dra: dist.DRAConfig, axis_name: str = "data",
                               domain: "domain_mod.DomainSpec | None" = None):
-    """Per-shard SIR step.  ``cfg.n_particles`` is the GLOBAL count; each of
-    the P shards carries an ensemble of C = n_particles / P slots.
+    """Per-shard SIR step for any ``repro.models.ssm.StateSpaceModel``.
+    ``cfg.n_particles`` is the GLOBAL count; each of the P shards
+    carries an ensemble of C = n_particles / P slots.
 
     With ``domain`` set, the observation fed to the step is this shard's
     halo slab (not the full frame) and the reweight runs through the
@@ -196,12 +233,14 @@ def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
     log-likelihoods travel back to their home slots — everything after
     the reweight (estimate, ESS, DRA resampling) is untouched, which is
     what keeps the domain-decomposed filter on the replicated filter's
-    exact trajectory.
+    exact trajectory.  Tiling requires the model's optional spatial
+    hooks (``positions`` + ``tile_observation_log_prob``, resolved by
+    ``domain_hooks``).
     """
-    if domain is not None and (model.tile_log_likelihood is None
-                               or model.positions is None):
+    positions_fn, tile_fn = domain_hooks(model)
+    if domain is not None and tile_fn is None:
         raise ValueError("domain decomposition needs a model with "
-                         "tile_log_likelihood and positions hooks")
+                         "tile_observation_log_prob and positions hooks")
 
     def step(carry: SIRCarry, observation):
         key, ens = carry
@@ -210,18 +249,18 @@ def make_distributed_sir_step(model: StateSpaceModel, cfg: SIRConfig,
         n_total = c * p
         key, k_dyn, k_res = jax.random.split(key, 3)
 
-        ens = particles.advance(ens, k_dyn, model.dynamics_sample)
+        ens = particles.advance(ens, k_dyn, model.transition_sample)
         if domain is None:
-            ll = model.log_likelihood(ens.state, observation)
+            ll = model.observation_log_prob(ens.state, observation)
             mig_diag = {}
         else:
             origin = domain.slab_origin(runtime.axis_index(axis_name))
 
             def tile_ll(state):
-                return model.tile_log_likelihood(state, observation, origin)
+                return tile_fn(state, observation, origin)
 
             ll, mig_diag = domain_mod.exchange_log_likelihood(
-                domain, ens, model.positions(ens.state), tile_ll,
+                domain, ens, positions_fn(ens.state), tile_ll,
                 axis_name=axis_name)
         ens = particles.reweight(ens, ll)
         lw = ens.log_weights

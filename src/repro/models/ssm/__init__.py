@@ -1,0 +1,34 @@
+"""Generic state-space model layer (DESIGN.md §12).
+
+The PPF paper positions the library as a framework for *arbitrary*
+particle-filtering applications; this package supplies the model
+contract that makes that true in code.  ``base.StateSpaceModel`` is the
+protocol every filter driver in ``repro.core`` is parameterized by, and
+three concrete families ship with it:
+
+* ``lgssm.LinearGaussianSSM`` — linear-Gaussian SSMs with an in-repo
+  reference Kalman filter/smoother, the *analytic oracle* the
+  statistical verification suite tests the particle filter against
+  (the first external ground truth in the repo — everything before it
+  was self-parity).
+* ``stochvol.StochasticVolatilitySSM`` — the canonical nonlinear,
+  heavy-tailed econometrics benchmark model.
+* ``lorenz96.Lorenz96SSM`` — a chaotic, arbitrary-dimension
+  geophysics model (the standard data-assimilation stress test).
+
+The microscopy tracking application of the paper (§VII) is *also* just
+one implementation of this protocol now: ``repro.models.tracking.TrackingSSM``.
+"""
+from repro.models.ssm.base import (StateSpaceModel, has_transition_log_prob,
+                                   simulate)
+from repro.models.ssm.lgssm import (LinearGaussianSSM, kalman_filter,
+                                    kalman_smoother, make_lgssm,
+                                    oracle_configs)
+from repro.models.ssm.lorenz96 import Lorenz96SSM
+from repro.models.ssm.stochvol import StochasticVolatilitySSM
+
+__all__ = [
+    "StateSpaceModel", "simulate", "has_transition_log_prob",
+    "LinearGaussianSSM", "make_lgssm", "kalman_filter", "kalman_smoother",
+    "oracle_configs", "StochasticVolatilitySSM", "Lorenz96SSM",
+]

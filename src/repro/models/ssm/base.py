@@ -1,0 +1,122 @@
+"""The ``StateSpaceModel`` protocol — the model contract of the filter
+stack (DESIGN.md §12).
+
+Every driver in ``repro.core`` (``make_sir_step``,
+``make_distributed_sir_step``, ``ParallelParticleFilter``,
+``FilterBank``, ``repro.serve.sessions.ParticleSessionServer``) is
+parameterized by *any* object implementing this protocol; nothing in the
+core knows about images, volatilities, or Lorenz dynamics.  The filters
+only ever call the three required methods, all batched over a leading
+particle axis of size ``n``:
+
+* ``init(key, n)`` — draw the initial particle cloud (the prior).
+* ``transition_sample(key, state)`` — one step of the bootstrap
+  proposal ``π = p(x_k | x_{k-1})`` for every particle.
+* ``observation_log_prob(state, observation)`` — ``(n,)`` per-particle
+  ``log p(z_k | x_k)`` against ONE shared observation.
+
+Optional capabilities (discovered with ``getattr`` — absence simply
+disables the feature):
+
+* ``transition_log_prob(prev, new)`` — exact ``(n,)`` transition
+  density, enabling non-bootstrap proposals and smoothing weights.
+* ``observation_sample(key, state)`` — per-particle synthetic
+  observations; powers the generic ``simulate`` helper below.
+* ``positions(state)`` / ``tile_observation_log_prob(state, slab,
+  origin)`` — the spatial hooks for input-space domain decomposition
+  (DESIGN.md §10); only meaningful for image-like observations.
+
+``repro.core.smc.StateSpaceModel`` remains the closure-style
+callable-bundle constructor and implements this protocol by delegation,
+so existing models keep working unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@runtime_checkable
+class StateSpaceModel(Protocol):
+    """Structural type of a particle-filterable model.
+
+    ``state_dim`` is advisory metadata (diagnostics and benchmarks use
+    it); the filters themselves are shape-polymorphic over the state
+    pytree.  All methods are batched over the leading particle axis.
+    """
+
+    state_dim: int
+
+    def init(self, key: Array, n: int) -> Any:
+        """Draw ``n`` initial particles: a state pytree with leading
+        dim ``n``."""
+        ...
+
+    def transition_sample(self, key: Array, state: Any) -> Any:
+        """Propagate every particle one step through the dynamics
+        (the bootstrap proposal)."""
+        ...
+
+    def observation_log_prob(self, state: Any, observation: Any) -> Array:
+        """Per-particle ``(n,)`` log-likelihood of one observation."""
+        ...
+
+
+def has_transition_log_prob(model: Any) -> bool:
+    """True when ``model`` exposes the optional exact transition
+    density ``transition_log_prob(prev, new)``."""
+    return callable(getattr(model, "transition_log_prob", None))
+
+
+def domain_hooks(model: Any):
+    """Resolve the optional spatial (domain-decomposition) hooks.
+
+    Returns ``(positions, tile_observation_log_prob)`` — both callables
+    — or ``(None, None)`` when the model does not support tiling.  The
+    legacy spelling ``tile_log_likelihood`` (the
+    ``repro.core.smc.StateSpaceModel`` bundle field) is accepted too.
+    """
+    pos = getattr(model, "positions", None)
+    tile = getattr(model, "tile_observation_log_prob", None)
+    if tile is None:
+        tile = getattr(model, "tile_log_likelihood", None)
+    if not (callable(pos) and callable(tile)):
+        return None, None
+    return pos, tile
+
+
+def simulate(key: Array, model: Any, n_steps: int) -> tuple[Any, Any]:
+    """Sample one latent trajectory + observation sequence from a model.
+
+    Requires the optional ``observation_sample`` capability.  Returns
+    ``(states, observations)`` with leading time dim ``n_steps``.  The
+    timing convention matches the SIR step in ``repro.core.smc``
+    (advance *then* reweight): a prior draw ``x ~ init`` is transitioned
+    before the first observation, so ``states[t]`` is ``t + 1``
+    transitions past the prior and ``observations[t] ~ p(z |
+    states[t])`` — the exact generative process both the particle
+    filter and the Kalman oracle (``lgssm.kalman_filter``) target.
+    Internally runs the model's batched callables with a particle batch
+    of one and squeezes it away.
+    """
+    if not callable(getattr(model, "observation_sample", None)):
+        raise ValueError(f"{type(model).__name__} has no "
+                         "observation_sample; cannot simulate")
+    k_init, k_scan = jax.random.split(key)
+    x0 = model.init(k_init, 1)
+
+    def step(x, k):
+        k_dyn, k_obs = jax.random.split(k)
+        x = model.transition_sample(k_dyn, x)
+        z = model.observation_sample(k_obs, x)
+        return x, (x, z)
+
+    keys = jax.random.split(k_scan, n_steps)
+    _, (xs, zs) = jax.lax.scan(step, x0, keys)
+    squeeze = lambda a: jnp.squeeze(a, axis=1)  # noqa: E731 — drop batch-of-1
+    return (jax.tree_util.tree_map(squeeze, xs),
+            jax.tree_util.tree_map(squeeze, zs))

@@ -1,0 +1,225 @@
+"""Linear-Gaussian state-space models + the reference Kalman oracle.
+
+The one model family whose exact posterior is available in closed form:
+
+    x_k = A x_{k-1} + w_k,   w_k ~ N(0, Q)
+    z_k = H x_k     + v_k,   v_k ~ N(0, R)
+    x_0 ~ N(m0, P0)
+
+``LinearGaussianSSM`` implements the ``repro.models.ssm.StateSpaceModel``
+protocol (float32, like the rest of the particle stack), and
+``kalman_filter`` / ``kalman_smoother`` compute the exact posterior in
+float64 **NumPy** — deliberately independent of the JAX numerics under
+test, so the oracle is an external ground truth rather than another
+self-parity check (Heine et al., arXiv:1812.01502, analyze PF
+correctness against exactly this family).
+
+Timing convention (matches ``repro.core.smc.make_sir_step``, which
+advances *then* reweights): the state observed by ``z_0`` is one
+transition past the ``N(m0, P0)`` prior draw, so the Kalman recursion is
+predict-then-update from ``(m0, P0)`` on every step including the first.
+``repro.models.ssm.base.simulate`` generates data under the same
+convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+_LOG_2PI = float(np.log(2.0 * np.pi))
+
+
+def _gaussian_log_prob(resid: Array, chol: Array) -> Array:
+    """``(n,)`` log N(resid; 0, chol cholᵀ) for an ``(n, d)`` residual
+    batch, via one triangular solve (no explicit inverse)."""
+    d = resid.shape[-1]
+    sol = jax.scipy.linalg.solve_triangular(chol, resid.T, lower=True)
+    log_det = jnp.sum(jnp.log(jnp.diagonal(chol)))
+    return -0.5 * (jnp.sum(sol * sol, axis=0) + d * _LOG_2PI) - log_det
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearGaussianSSM:
+    """A linear-Gaussian SSM (use ``make_lgssm`` to build one from
+    ``(A, Q, H, R, m0, P0)``; Cholesky factors are precomputed there).
+
+    Implements the full optional surface of the protocol:
+    ``transition_log_prob`` and ``observation_sample`` are exact.
+    """
+
+    transition_matrix: Array      # A  (dx, dx)
+    observation_matrix: Array     # H  (dz, dx)
+    init_mean: Array              # m0 (dx,)
+    transition_chol: Array        # chol(Q)  lower
+    observation_chol: Array       # chol(R)  lower
+    init_chol: Array              # chol(P0) lower
+
+    @property
+    def state_dim(self) -> int:
+        """Latent dimension ``dx``."""
+        return self.transition_matrix.shape[0]
+
+    @property
+    def obs_dim(self) -> int:
+        """Observation dimension ``dz``."""
+        return self.observation_matrix.shape[0]
+
+    def init(self, key: Array, n: int) -> Array:
+        """Draw ``(n, dx)`` particles from ``N(m0, P0)``."""
+        eps = jax.random.normal(key, (n, self.state_dim))
+        return self.init_mean + eps @ self.init_chol.T
+
+    def transition_sample(self, key: Array, state: Array) -> Array:
+        """``A x + chol(Q) ε`` for every particle."""
+        eps = jax.random.normal(key, state.shape)
+        return state @ self.transition_matrix.T + eps @ self.transition_chol.T
+
+    def observation_log_prob(self, state: Array, observation: Array) -> Array:
+        """``(n,)`` exact Gaussian log-density of one observation."""
+        resid = observation - state @ self.observation_matrix.T
+        return _gaussian_log_prob(resid, self.observation_chol)
+
+    def transition_log_prob(self, prev: Array, new: Array) -> Array:
+        """``(n,)`` exact ``log p(new | prev)``."""
+        return _gaussian_log_prob(new - prev @ self.transition_matrix.T,
+                                  self.transition_chol)
+
+    def observation_sample(self, key: Array, state: Array) -> Array:
+        """Per-particle ``(n, dz)`` draws of ``z ~ N(Hx, R)``."""
+        eps = jax.random.normal(key, (state.shape[0], self.obs_dim))
+        return state @ self.observation_matrix.T + eps @ self.observation_chol.T
+
+
+def make_lgssm(a, q, h, r, m0=None, p0=None) -> LinearGaussianSSM:
+    """Build a ``LinearGaussianSSM`` from ``(A, Q, H, R, m0, P0)``.
+
+    Scalars / 1-D inputs are promoted to matrices; ``m0`` defaults to 0
+    and ``P0`` to ``Q``.  Cholesky factors are computed once here in
+    float64 and stored as float32 (the particle stack's dtype).
+    """
+    a = np.atleast_2d(np.asarray(a, np.float64))
+    h = np.atleast_2d(np.asarray(h, np.float64))
+    dx, dz = a.shape[0], h.shape[0]
+    q = _as_cov(q, dx, "Q")
+    r = _as_cov(r, dz, "R")
+    m0 = np.zeros(dx) if m0 is None else np.asarray(m0, np.float64).reshape(dx)
+    p0 = q if p0 is None else _as_cov(p0, dx, "P0")
+    f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+    return LinearGaussianSSM(
+        transition_matrix=f32(a), observation_matrix=f32(h), init_mean=f32(m0),
+        transition_chol=f32(np.linalg.cholesky(q)),
+        observation_chol=f32(np.linalg.cholesky(r)),
+        init_chol=f32(np.linalg.cholesky(p0)))
+
+
+def _as_cov(x, d: int, name: str) -> np.ndarray:
+    """Promote a scalar / diagonal / full input to a (d, d) SPD matrix."""
+    x = np.asarray(x, np.float64)
+    if x.ndim == 0:
+        x = np.eye(d) * x
+    elif x.ndim == 1:
+        x = np.diag(x)
+    if x.shape != (d, d):
+        raise ValueError(f"{name} must be scalar, ({d},) or ({d},{d}); "
+                         f"got shape {x.shape}")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# The analytic oracle: exact Kalman filter / RTS smoother (float64 NumPy)
+# ---------------------------------------------------------------------------
+
+class KalmanResult(NamedTuple):
+    """Exact posterior over a sequence: per-step filtered (or smoothed)
+    moments plus, for the filter, per-step log-marginal increments."""
+
+    means: np.ndarray          # (T, dx)
+    covs: np.ndarray           # (T, dx, dx)
+    log_marginals: np.ndarray  # (T,) log p(z_k | z_{<k}); zeros for smoother
+
+
+def kalman_filter(model: LinearGaussianSSM, observations) -> KalmanResult:
+    """Exact filtering distribution ``p(x_k | z_{0..k})`` for every step.
+
+    Predict-then-update from ``(m0, P0)`` — the particle filter's exact
+    target (see the module docstring for the timing convention), with
+    per-step log-marginal increments ``log p(z_k | z_{<k})``, the
+    quantity ``StepOutput.log_marginal`` estimates.
+    """
+    a = np.asarray(model.transition_matrix, np.float64)
+    h = np.asarray(model.observation_matrix, np.float64)
+    lq = np.asarray(model.transition_chol, np.float64)
+    lr = np.asarray(model.observation_chol, np.float64)
+    q, r = lq @ lq.T, lr @ lr.T
+    m = np.asarray(model.init_mean, np.float64)
+    lp0 = np.asarray(model.init_chol, np.float64)
+    p = lp0 @ lp0.T
+    zs = np.atleast_2d(np.asarray(observations, np.float64).reshape(
+        len(observations), -1))
+    means, covs, logz = [], [], []
+    for z in zs:
+        m = a @ m                       # predict
+        p = a @ p @ a.T + q
+        s = h @ p @ h.T + r             # innovation moments
+        resid = z - h @ m
+        sol = np.linalg.solve(s, resid)
+        logz.append(-0.5 * (resid @ sol + len(z) * _LOG_2PI
+                            + np.linalg.slogdet(s)[1]))
+        k = p @ h.T @ np.linalg.inv(s)  # update (Joseph form for symmetry)
+        m = m + k @ resid
+        ikh = np.eye(len(m)) - k @ h
+        p = ikh @ p @ ikh.T + k @ r @ k.T
+        means.append(m)
+        covs.append(p)
+    return KalmanResult(np.asarray(means), np.asarray(covs),
+                        np.asarray(logz))
+
+
+def kalman_smoother(model: LinearGaussianSSM, observations) -> KalmanResult:
+    """Exact smoothing distribution ``p(x_k | z_{0..T-1})`` (RTS backward
+    pass over ``kalman_filter``'s output)."""
+    a = np.asarray(model.transition_matrix, np.float64)
+    lq = np.asarray(model.transition_chol, np.float64)
+    q = lq @ lq.T
+    filt = kalman_filter(model, observations)
+    t = len(filt.means)
+    means, covs = list(filt.means), list(filt.covs)
+    for k in range(t - 2, -1, -1):
+        m_pred = a @ filt.means[k]
+        p_pred = a @ filt.covs[k] @ a.T + q
+        g = filt.covs[k] @ a.T @ np.linalg.inv(p_pred)
+        means[k] = filt.means[k] + g @ (means[k + 1] - m_pred)
+        covs[k] = filt.covs[k] + g @ (covs[k + 1] - p_pred) @ g.T
+    return KalmanResult(np.asarray(means), np.asarray(covs),
+                        np.zeros(t))
+
+
+def oracle_configs() -> dict[str, LinearGaussianSSM]:
+    """The three seeded linear-Gaussian configs the statistical
+    verification suite runs against (tests/test_ssm_oracle.py):
+
+    * ``ar1``      — scalar AR(1), the classic textbook filter (and the
+      same dynamics the ``sir_parity.json`` goldens pin).
+    * ``cv2d``     — 2-D constant-velocity tracking with position-only
+      observations: the linear skeleton of the paper's §VII workload.
+    * ``spiral``   — a damped 2-D rotation observed in ONE coordinate
+      only: correlated latents under partial observability.
+    """
+    theta = 0.4
+    rot = 0.97 * np.array([[np.cos(theta), -np.sin(theta)],
+                           [np.sin(theta), np.cos(theta)]])
+    return {
+        "ar1": make_lgssm(0.9, 0.5, 1.0, 0.4, p0=4.0),
+        "cv2d": make_lgssm(
+            np.block([[np.eye(2), np.eye(2)], [np.zeros((2, 2)), np.eye(2)]]),
+            np.diag([0.02, 0.02, 0.05, 0.05]),
+            np.concatenate([np.eye(2), np.zeros((2, 2))], axis=1),
+            0.25, p0=np.diag([1.0, 1.0, 0.5, 0.5])),
+        "spiral": make_lgssm(rot, 0.05, np.array([[1.0, 0.0]]), 0.3,
+                             p0=1.0),
+    }

@@ -1,0 +1,79 @@
+"""Stochastic-volatility SSM — the canonical *nonlinear* PF benchmark.
+
+The standard discrete-time SV model (log-volatility AR(1) latent,
+zero-mean returns whose variance is the exponentiated latent):
+
+    x_k = μ + φ (x_{k-1} − μ) + σ w_k,   w_k ~ N(0, 1)
+    z_k = exp(x_k / 2) v_k,              v_k ~ N(0, 1)
+    x_0 ~ N(μ, σ² / (1 − φ²))            (the stationary law)
+
+No closed-form posterior exists (the observation density is
+log-concave in ``x`` but non-Gaussian), which is exactly why this is
+the family the ``ssm_parity.json`` golden pins the generic SIR step on:
+it exercises the model-agnostic path with a likelihood that shares no
+code with the tracking application.  Brown's PF library (arXiv:
+2001.10451) ships the same model as its minimal nonlinear example.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+_LOG_2PI = float(np.log(2.0 * np.pi))
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticVolatilitySSM:
+    """SV model with latent mean ``mu``, persistence ``phi`` (|φ| < 1)
+    and vol-of-vol ``sigma``.  State is ``(n, 1)``; observations are
+    scalar returns."""
+
+    mu: float = -1.0
+    phi: float = 0.97
+    sigma: float = 0.3
+
+    def __post_init__(self):
+        if not abs(self.phi) < 1.0:
+            raise ValueError(f"phi must satisfy |phi| < 1 for a "
+                             f"stationary latent, got {self.phi}")
+
+    @property
+    def state_dim(self) -> int:
+        """Latent dimension (the scalar log-volatility)."""
+        return 1
+
+    @property
+    def stationary_std(self) -> float:
+        """Standard deviation of the stationary latent law."""
+        return self.sigma / float(np.sqrt(1.0 - self.phi ** 2))
+
+    def init(self, key: Array, n: int) -> Array:
+        """Draw ``(n, 1)`` log-volatilities from the stationary law."""
+        return (self.mu
+                + self.stationary_std * jax.random.normal(key, (n, 1)))
+
+    def transition_sample(self, key: Array, state: Array) -> Array:
+        """Mean-reverting AR(1) step on the log-volatility."""
+        eps = jax.random.normal(key, state.shape)
+        return self.mu + self.phi * (state - self.mu) + self.sigma * eps
+
+    def observation_log_prob(self, state: Array, observation: Array) -> Array:
+        """``(n,)`` log N(z; 0, exp(x)) — heteroskedastic Gaussian."""
+        x = state[:, 0]
+        return -0.5 * (_LOG_2PI + x
+                       + jnp.square(observation) * jnp.exp(-x))
+
+    def transition_log_prob(self, prev: Array, new: Array) -> Array:
+        """``(n,)`` exact Gaussian transition density."""
+        resid = (new - self.mu - self.phi * (prev - self.mu))[:, 0]
+        return (-0.5 * jnp.square(resid / self.sigma)
+                - 0.5 * _LOG_2PI - jnp.log(self.sigma))
+
+    def observation_sample(self, key: Array, state: Array) -> Array:
+        """Per-particle ``(n,)`` return draws ``z ~ N(0, exp(x))``."""
+        v = jax.random.normal(key, (state.shape[0],))
+        return jnp.exp(0.5 * state[:, 0]) * v

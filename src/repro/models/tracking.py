@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.domain import DomainSpec
-from repro.core.smc import StateSpaceModel
 
 Array = jax.Array
 
@@ -147,18 +146,45 @@ def make_domain_spec(cfg: TrackingConfig, tiles: int, *,
                                k_cap=k_cap)
 
 
-def make_tracking_model(cfg: TrackingConfig) -> StateSpaceModel:
-    h, w = cfg.img_size
+@dataclasses.dataclass(frozen=True)
+class TrackingSSM:
+    """The paper's tracking application as a
+    ``repro.models.ssm.StateSpaceModel`` adapter (DESIGN.md §12).
 
-    def init_sampler(key: Array, n: int) -> Array:
+    What used to be the hard-wired likelihood of the whole filter stack
+    is now just one protocol implementation among the generic families
+    in ``repro.models.ssm`` — state ``(N, 5)`` = (y, x, v_y, v_x, I_0),
+    near-constant-velocity dynamics, Gaussian-PSF patch likelihood.  It
+    additionally implements the spatial hooks (``positions`` /
+    ``tile_observation_log_prob``) that enable input-space domain
+    decomposition (DESIGN.md §10), which the generic families do not
+    have.  Numerics are bitwise those of the pre-protocol closure model
+    (pinned by ``tests/golden/sir_parity.json`` and
+    ``session_parity.json``).
+    """
+
+    cfg: TrackingConfig
+
+    @property
+    def state_dim(self) -> int:
+        """Length of the (y, x, v_y, v_x, I_0) state vector."""
+        return 5
+
+    def init(self, key: Array, n: int) -> Array:
+        """Uniform positions over the frame, Gaussian velocities and
+        intensities around the configured SNR."""
+        cfg = self.cfg
+        h, w = cfg.img_size
         k1, k2, k3 = jax.random.split(key, 3)
         pos = jax.random.uniform(k1, (n, 2)) * jnp.asarray([h, w], jnp.float32)
         vel = jax.random.normal(k2, (n, 2)) * cfg.v_init
         inten = jnp.abs(cfg.i_peak + 0.5 * jax.random.normal(k3, (n, 1)))
         return jnp.concatenate([pos, vel, inten], axis=-1)
 
-    def dynamics_sample(key: Array, state: Array) -> Array:
+    def transition_sample(self, key: Array, state: Array) -> Array:
         """Near-constant-velocity: pos += vel + ε_p;  vel += ε_v."""
+        cfg = self.cfg
+        h, w = cfg.img_size
         n = state.shape[0]
         eps = jax.random.normal(key, (n, 5))
         pos = state[:, 0:2] + state[:, 2:4] + cfg.sigma_pos * eps[:, 0:2]
@@ -167,15 +193,33 @@ def make_tracking_model(cfg: TrackingConfig) -> StateSpaceModel:
         pos = jnp.clip(pos, 0.0, jnp.asarray([h - 1.0, w - 1.0]))
         return jnp.concatenate([pos, vel, inten], axis=-1)
 
-    def log_likelihood(state: Array, frame: Array) -> Array:
-        return patch_log_likelihood(state, frame, cfg)
+    def observation_log_prob(self, state: Array, frame: Array) -> Array:
+        """Per-particle patch likelihood against one full frame."""
+        return patch_log_likelihood(state, frame, self.cfg)
 
-    def tile_log_likelihood(state: Array, slab: Array, origin_yx) -> Array:
-        return tile_patch_log_likelihood(state, slab, origin_yx, cfg)
+    def positions(self, state: Array) -> Array:
+        """Frame-coordinate (y, x) of every particle (domain hook)."""
+        return state[:, 0:2]
 
-    return StateSpaceModel(init_sampler=init_sampler,
-                           dynamics_sample=dynamics_sample,
-                           log_likelihood=log_likelihood,
-                           state_dim=5,
-                           positions=lambda state: state[:, 0:2],
-                           tile_log_likelihood=tile_log_likelihood)
+    def tile_observation_log_prob(self, state: Array, slab: Array,
+                                  origin_yx) -> Array:
+        """Tile-local patch likelihood against one halo slab (domain
+        hook, DESIGN.md §10.2)."""
+        return tile_patch_log_likelihood(state, slab, origin_yx, self.cfg)
+
+    def observation_sample(self, key: Array, state: Array) -> Array:
+        """Per-particle noisy frames ``(n, H, W)`` — one rendered spot
+        plus read-out noise (powers ``repro.models.ssm.base.simulate``;
+        movie synthesis proper lives in ``repro.data.synthetic_movie``)."""
+        cfg = self.cfg
+        clean = jax.vmap(
+            lambda s: render_spot(s[0:2], s[4], cfg, cfg.img_size))(state)
+        noise = cfg.sigma_noise * jax.random.normal(
+            key, (state.shape[0],) + cfg.img_size)
+        return clean + cfg.i_bg + noise
+
+
+def make_tracking_model(cfg: TrackingConfig) -> TrackingSSM:
+    """Build the tracking model (kept as the stable constructor name;
+    returns the ``TrackingSSM`` protocol adapter)."""
+    return TrackingSSM(cfg)

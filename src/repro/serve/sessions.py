@@ -45,6 +45,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.checkpoint import store
 from repro.core import filters, particles, runtime, smc
+from repro.models.ssm import base as ssm_base
 
 Array = jax.Array
 
@@ -157,7 +158,8 @@ class ParticleSessionServer:
     changes never retrace (``step_traces`` stays 1 — DESIGN.md §11.3).
 
     Args:
-      model: the ``StateSpaceModel`` every session filters with.
+      model: any ``repro.models.ssm.StateSpaceModel`` — every
+        session filters with it.
       sir: per-session SIR configuration (``n_particles`` per slot).
       capacity: ``B_max`` — the static slot count of the resident bank.
       mesh: optional device mesh; slots are sharded over ``bank_axis``
@@ -171,7 +173,7 @@ class ParticleSessionServer:
     ``result`` drains and returns the ``FilterResult`` trajectory so far.
     """
 
-    def __init__(self, model: smc.StateSpaceModel, sir: smc.SIRConfig,
+    def __init__(self, model: ssm_base.StateSpaceModel, sir: smc.SIRConfig,
                  capacity: int = 8, mesh: Mesh | None = None,
                  bank_axis: str = "bank"):
         if capacity < 1:

@@ -1,0 +1,63 @@
+"""Regenerate the generic-step golden (tests/golden/ssm_parity.json).
+
+Mirrors generate_parity.py, but through the *generic* model path: a
+stochastic-volatility model (``repro.models.ssm.StochasticVolatilitySSM``
+— nonlinear, heteroskedastic, shares no code with the tracking
+likelihood) run through ``run_sir``.  The recorded trajectories pin the
+protocol-dispatched SIR numerics BITWISE (tests/test_ssm_parity.py
+checks exact equality, not atol): any change to RNG consumption order,
+protocol method dispatch, weight algebra, or resampling math in the
+generic path shows up as a failed equality.
+
+Only regenerate for a *deliberate* numerical change, and say so in the
+commit:
+
+    PYTHONPATH=src python tests/golden/generate_ssm.py
+"""
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+
+from repro.core import SIRConfig
+from repro.core.smc import run_sir
+from repro.models import ssm
+
+SV = dict(mu=-1.2, phi=0.95, sigma=0.35)
+N_PARTICLES = 256
+N_STEPS = 32
+SIM_SEED = 5
+RUN_SEED = 19
+
+
+def sv_golden() -> dict:
+    model = ssm.StochasticVolatilitySSM(**SV)
+    _, zs = ssm.simulate(jax.random.key(SIM_SEED), model, N_STEPS)
+    out = {"config": dict(SV, n_particles=N_PARTICLES, n_steps=N_STEPS,
+                          sim_seed=SIM_SEED, run_seed=RUN_SEED),
+           "observations": np.asarray(zs, np.float64).tolist()}
+    for resampler in ("systematic", "stratified"):
+        cfg = SIRConfig(n_particles=N_PARTICLES, ess_frac=0.6,
+                        resampler=resampler)
+        carry, outs = run_sir(jax.random.key(RUN_SEED), model, cfg,
+                              np.asarray(zs))
+        out[resampler] = {
+            "estimates": np.asarray(outs.estimate, np.float64).tolist(),
+            "ess": np.asarray(outs.ess, np.float64).tolist(),
+            "log_marginal": np.asarray(outs.log_marginal,
+                                       np.float64).tolist(),
+            "resampled": np.asarray(outs.resampled).astype(int).tolist(),
+            "final_log_weights": np.asarray(carry.ensemble.log_weights,
+                                            np.float64).tolist(),
+        }
+    return out
+
+
+if __name__ == "__main__":
+    dest = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "ssm_parity.json")
+    with open(dest, "w") as f:
+        json.dump({"stochvol": sv_golden()}, f)
+    print(f"wrote {dest}", file=sys.stderr)

@@ -1,0 +1,110 @@
+"""Statistical verification helpers (DESIGN.md §12.2).
+
+Everything the repo tested before this layer was *self*-parity: one
+execution path pinned against another.  These helpers test the filter
+against something external — the exact Kalman posterior on
+linear-Gaussian models, and the defining unbiasedness property of the
+resampling schemes — with explicit, derived tolerances instead of
+hand-tuned ``atol``.
+
+Shared by tests/test_ssm_oracle.py and tests/test_ssm_prop.py; not a
+test module itself (pytest collects ``test_*.py`` only).
+"""
+import numpy as np
+
+# Default slack factor on Monte-Carlo CLT bounds.  Derivation: for SIR
+# the posterior-mean estimator obeys a CLT, m̂_t − m_t ≈ N(0, σ_t²/N)
+# with σ_t² ≥ tr P_t (Chopin 2004; Heine et al., arXiv:1812.01502) —
+# the excess over tr P_t comes from weight degeneracy and resampling
+# noise and is a model-dependent O(1) constant c (independent of N, so
+# the error still shrinks as 1/sqrt(N)).  Calibration on the three
+# `oracle_configs` (32 seeds at N = 4096; 8 seeds at N = 1e5 confirming
+# the constant is N-stable — per-config numbers recorded in
+# tests/test_ssm_oracle.py): observed rmse / sqrt(mean_t tr P_t / N)
+# averages ≈ 1.9–2.3 with seed maxima ≈ 7.5 for `ar1`/`spiral`, and
+# averages ≈ 6.9 with maxima ≈ 21.5 for `cv2d` — the bootstrap proposal
+# never observes the velocity block directly, so its asymptotic
+# constant is an order of magnitude larger.  The default SLACK = 6
+# covers the well-mixed configs' typical runs; callers with a fixed
+# seed or known-bad mixing pass a model-specific slack sized off the
+# recorded maxima.
+CLT_SLACK = 6.0
+
+
+def rmse(a, b) -> float:
+    """Root-mean-square error between two (T, d) trajectories."""
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return float(np.sqrt(np.mean(np.sum((a - b) ** 2, axis=-1))))
+
+
+def pf_mean_bound(kalman_covs, n_particles: int,
+                  slack: float = CLT_SLACK) -> float:
+    """CLT bound on RMSE(PF posterior mean, Kalman posterior mean).
+
+    ``slack · sqrt(mean_t tr P_t / N)`` — see the ``CLT_SLACK``
+    derivation above.  The caller should also assert the bound is
+    *non-vacuous* (`< sqrt(mean_t tr P_t)`, i.e. tighter than the
+    posterior's own spread), which holds whenever N > slack².
+    """
+    tr = np.trace(np.asarray(kalman_covs, np.float64),
+                  axis1=-2, axis2=-1)
+    return float(slack * np.sqrt(tr.mean() / n_particles))
+
+
+def log_marginal_bound(n_steps: int, n_particles: int,
+                       slack: float = CLT_SLACK) -> float:
+    """Bound on |PF total log-marginal − Kalman log-likelihood|.
+
+    The SIR log-normalizing-constant estimator has O(T/N) bias and
+    O(sqrt(T/N)) standard deviation for ergodic models (Del Moral's
+    unbiasedness of the *linear* Z estimator + delta method), so the
+    gate is ``slack · sqrt(T / N)``.  The constant is model-dependent
+    for the same mixing reasons as ``CLT_SLACK`` (32-seed calibration
+    maxima: 7.4 `ar1` / 3.8 `spiral` / 87.8 `cv2d`, stable across N —
+    callers pass per-model slack sized off those).
+    """
+    return float(slack * np.sqrt(n_steps / n_particles))
+
+
+def ess_sane(ess, n_particles: int) -> None:
+    """Assert every per-step ESS lies in its mathematical range
+    [1, N] (N_eff = 1/Σw² with normalized weights), with a float32
+    tolerance at the top end."""
+    ess = np.asarray(ess, np.float64)
+    assert np.all(np.isfinite(ess)), "non-finite ESS"
+    assert ess.min() >= 1.0 - 1e-3, f"ESS below 1: {ess.min()}"
+    top = n_particles * (1 + 1e-5)
+    assert ess.max() <= top, f"ESS above N={n_particles}: {ess.max()}"
+
+
+def weighted_mean_cov(state, log_weights):
+    """Posterior mean and covariance of a weighted particle cloud
+    (float64, for comparison against the float64 Kalman oracle)."""
+    x = np.asarray(state, np.float64)
+    lw = np.asarray(log_weights, np.float64)
+    w = np.exp(lw - lw.max())
+    w = w / w.sum()
+    m = w @ x
+    d = x - m
+    return m, (w[:, None] * d).T @ d
+
+
+def resampling_mean_counts(counts_fn, key_seq, log_weights, n_out: int):
+    """Average the counts a resampler emits over ``key_seq`` replicates.
+
+    Returns ``(mean_counts, expected, threshold)`` where ``expected``
+    is the unbiasedness target ``n_out · w_i`` and ``threshold`` a
+    5-sigma CLT gate on the per-slot deviation of the replicate mean.
+    Per-category variance: multinomial gives ``n w (1−w)``; systematic /
+    stratified / residual only lower it (each count is within 1 of its
+    expectation), so ``max(n w (1−w), 1/4)`` is a valid ceiling for all
+    schemes and the gate is conservative.
+    """
+    lw = np.asarray(log_weights, np.float64)
+    w = np.exp(lw - lw.max())
+    w = w / w.sum()
+    reps = np.stack([np.asarray(counts_fn(k), np.float64) for k in key_seq])
+    expected = n_out * w
+    var_ceiling = np.maximum(n_out * w * (1.0 - w), 0.25)
+    threshold = 5.0 * np.sqrt(var_ceiling / len(key_seq))
+    return reps.mean(axis=0), expected, threshold

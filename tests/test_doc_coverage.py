@@ -1,4 +1,5 @@
-"""Doc-coverage floor on the public API of repro.core + repro.serve.
+"""Doc-coverage floor on the public API of repro.core, repro.serve,
+and repro.models.ssm (the contract packages).
 
 Dependency-free mirror of the ``interrogate`` gate CI's docs job runs
 (same counting rules as the [tool.interrogate] config in pyproject.toml:
@@ -45,7 +46,8 @@ def _coverage(pkg: str):
     return len(documented) / len(defs), missing
 
 
-@pytest.mark.parametrize("pkg", ["repro/core", "repro/serve"])
+@pytest.mark.parametrize("pkg", ["repro/core", "repro/serve",
+                                 "repro/models/ssm"])
 def test_public_api_doc_coverage(pkg):
     cov, missing = _coverage(pkg)
     assert cov >= FLOOR, (

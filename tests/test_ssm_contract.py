@@ -1,0 +1,170 @@
+"""Protocol-contract, error-path, and resampler-unbiasedness tests for
+the SSM layer — the dependency-free companion to tests/test_ssm_prop.py
+(these run even without the hypothesis dev extra, keeping the contract
+AND the statistical gates pinned in minimal environments)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import stats
+
+from repro.core import resampling
+from repro.core.smc import StateSpaceModel as BundleModel
+from repro.models import ssm
+from repro.models.ssm.base import domain_hooks
+from repro.models.tracking import TrackingConfig, make_tracking_model
+
+
+def test_all_families_satisfy_the_protocol():
+    """Structural check: every shipped family (and the legacy bundle,
+    and the tracking adapter) is a ``StateSpaceModel``."""
+    members = [
+        ssm.oracle_configs()["ar1"],
+        ssm.StochasticVolatilitySSM(),
+        ssm.Lorenz96SSM(),
+        make_tracking_model(TrackingConfig(img_size=(32, 32))),
+        BundleModel(lambda k, n: jax.random.normal(k, (n, 1)),
+                    lambda k, s: s, lambda s, z: s[:, 0], state_dim=1),
+    ]
+    for m in members:
+        assert isinstance(m, ssm.StateSpaceModel), type(m)
+
+
+def test_domain_hooks_resolution():
+    """Spatial hooks resolve for the tracking adapter (method spelling)
+    and the legacy bundle (field spelling), and are absent — (None,
+    None), never a half-pair — for the generic families."""
+    tracking = make_tracking_model(TrackingConfig(img_size=(32, 32)))
+    pos, tile = domain_hooks(tracking)
+    assert callable(pos) and callable(tile)
+    for m in (ssm.oracle_configs()["ar1"], ssm.StochasticVolatilitySSM(),
+              ssm.Lorenz96SSM()):
+        assert domain_hooks(m) == (None, None)
+    bundle = BundleModel(lambda k, n: None, lambda k, s: s,
+                         lambda s, z: z, positions=lambda s: s,
+                         tile_log_likelihood=lambda s, z, o: z)
+    pos, tile = domain_hooks(bundle)
+    assert callable(pos) and callable(tile)
+
+
+def test_bundle_model_delegates_protocol_methods():
+    """The closure-bundle adapter exposes the protocol methods as pure
+    delegation — same values as calling the fields directly."""
+    bundle = BundleModel(
+        lambda k, n: jax.random.normal(k, (n, 2)),
+        lambda k, s: s * 2.0,
+        lambda s, z: -jnp_sum_sq(s, z), state_dim=2)
+    k = jax.random.key(0)
+    x = bundle.init(k, 5)
+    np.testing.assert_array_equal(np.asarray(x),
+                                  np.asarray(bundle.init_sampler(k, 5)))
+    np.testing.assert_array_equal(
+        np.asarray(bundle.transition_sample(k, x)),
+        np.asarray(bundle.dynamics_sample(k, x)))
+    np.testing.assert_array_equal(
+        np.asarray(bundle.observation_log_prob(x, 1.0)),
+        np.asarray(bundle.log_likelihood(x, 1.0)))
+
+
+def jnp_sum_sq(s, z):
+    """Toy likelihood used by the delegation test."""
+    import jax.numpy as jnp
+    return jnp.sum((s - z) ** 2, axis=-1)
+
+
+def test_family_validation_errors():
+    with pytest.raises(ValueError, match="phi"):
+        ssm.StochasticVolatilitySSM(phi=1.1)
+    with pytest.raises(ValueError, match="dim"):
+        ssm.Lorenz96SSM(dim=3)
+    with pytest.raises(ValueError, match="obs_stride"):
+        ssm.Lorenz96SSM(dim=8, obs_stride=9)
+    with pytest.raises(ValueError, match="Q"):
+        ssm.make_lgssm(np.eye(2), np.ones((3, 3)), np.eye(2), 1.0)
+
+
+def test_simulate_requires_observation_sample():
+    bundle = BundleModel(lambda k, n: jax.random.normal(k, (n, 1)),
+                         lambda k, s: s, lambda s, z: s[:, 0], state_dim=1)
+    with pytest.raises(ValueError, match="observation_sample"):
+        ssm.simulate(jax.random.key(0), bundle, 4)
+
+
+@pytest.mark.parametrize("scheme", sorted(resampling.RESAMPLERS))
+def test_resampling_unbiasedness(scheme):
+    """The defining statistical property of every resampler: expected
+    offspring counts equal N·w_i.  5-sigma CLT gate over 400 replicates
+    (threshold derivation in ``stats.resampling_mean_counts``).  Lives
+    here, not in the hypothesis suite: the gate must stay live without
+    the dev extra."""
+    n = 64
+    lw = jnp.asarray(np.random.default_rng(0).normal(size=n) * 2.0,
+                     jnp.float32)
+    fn = jax.jit(lambda k: resampling.RESAMPLERS[scheme](k, lw, n,
+                                                         capacity=n))
+    keys = [jax.random.key(i) for i in range(400)]
+    mean, expected, threshold = stats.resampling_mean_counts(
+        fn, keys, lw, n)
+    dev = np.abs(mean - expected)
+    worst = int(np.argmax(dev - threshold))
+    assert np.all(dev <= threshold), (
+        f"{scheme} biased at slot {worst}: mean count {mean[worst]:.3f} "
+        f"vs expected {expected[worst]:.3f} (threshold "
+        f"{threshold[worst]:.3f})")
+
+
+def test_lgssm_transition_log_prob_matches_scipy_free_form():
+    """Cross-check the triangular-solve Gaussian density against a
+    dense float64 computation."""
+    model = ssm.oracle_configs()["cv2d"]
+    k1, k2 = jax.random.split(jax.random.key(1))
+    prev = model.init(k1, 16)
+    new = model.transition_sample(k2, prev)
+    got = np.asarray(model.transition_log_prob(prev, new), np.float64)
+    a = np.asarray(model.transition_matrix, np.float64)
+    lq = np.asarray(model.transition_chol, np.float64)
+    q = lq @ lq.T
+    resid = np.asarray(new, np.float64) - np.asarray(prev, np.float64) @ a.T
+    qinv = np.linalg.inv(q)
+    want = (-0.5 * np.einsum("ni,ij,nj->n", resid, qinv, resid)
+            - 0.5 * (len(q) * np.log(2 * np.pi)
+                     + np.linalg.slogdet(q)[1]))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_kalman_filter_matches_direct_joint_inference():
+    """Oracle-of-the-oracle: on a tiny problem, the sequential Kalman
+    recursion must agree with one exact batch solve of the full
+    Gaussian joint posterior (build the joint precision over all T
+    states, condition on all observations at once)."""
+    model = ssm.make_lgssm(0.8, 0.3, 1.0, 0.5, p0=2.0)
+    t = 5
+    zs = np.asarray([[0.4], [-1.0], [0.2], [0.9], [-0.3]])
+    kf = ssm.kalman_filter(model, zs)
+    # joint over (x_1..x_T) with x_1 ~ N(0, a² p0 + q): precision matrix
+    # (parameters re-read from the model: they were rounded to float32
+    # on construction, and the comparison must use identical values)
+    a = float(np.asarray(model.transition_matrix, np.float64)[0, 0])
+    h = float(np.asarray(model.observation_matrix, np.float64)[0, 0])
+    q = float(np.asarray(model.transition_chol, np.float64)[0, 0]) ** 2
+    r = float(np.asarray(model.observation_chol, np.float64)[0, 0]) ** 2
+    p0 = float(np.asarray(model.init_chol, np.float64)[0, 0]) ** 2
+    p1 = a * a * p0 + q
+    prec = np.zeros((t, t))
+    prec[0, 0] = 1.0 / p1
+    for k in range(1, t):
+        prec[k, k] += 1.0 / q
+        prec[k - 1, k - 1] += a * a / q
+        prec[k - 1, k] -= a / q
+        prec[k, k - 1] -= a / q
+    prec += np.eye(t) * h * h / r
+    info = (h / r) * zs[:, 0]
+    cov = np.linalg.inv(prec)
+    mean = cov @ info
+    # filtered moments at the final step == joint marginal of x_T
+    np.testing.assert_allclose(kf.means[-1, 0], mean[-1], rtol=1e-10)
+    np.testing.assert_allclose(kf.covs[-1, 0, 0], cov[-1, -1], rtol=1e-10)
+    # and the smoother must reproduce ALL joint marginals
+    ks = ssm.kalman_smoother(model, zs)
+    np.testing.assert_allclose(ks.means[:, 0], mean, rtol=1e-9)
+    np.testing.assert_allclose(ks.covs[:, 0, 0], np.diag(cov), rtol=1e-9)

@@ -1,0 +1,72 @@
+"""Per-package coverage floors on a coverage.py XML report.
+
+pytest-cov's ``--cov-fail-under`` gates only the COMBINED rate, so
+adding a well-covered package would let a poorly-covered one hide
+underneath the average.  This checker gates each package separately:
+
+    python tools/coverage_floor.py coverage.xml repro/core=70 \\
+        repro/models/ssm=80
+
+Exits non-zero (listing every failing package) if any floor is missed.
+Packages are matched by path prefix against the ``filename`` attribute
+of every ``<class>`` element, so it works for src layouts and
+namespace packages alike.
+"""
+import sys
+import xml.etree.ElementTree as ET
+
+
+def package_rates(xml_path: str) -> dict:
+    """Map each source file in the report to (covered, total) lines."""
+    rates = {}
+    root = ET.parse(xml_path).getroot()
+    for cls in root.iter("class"):
+        fname = cls.get("filename", "")
+        lines = cls.findall("./lines/line")
+        total = len(lines)
+        covered = sum(1 for ln in lines if int(ln.get("hits", "0")) > 0)
+        if total:
+            prev = rates.get(fname, (0, 0))
+            rates[fname] = (prev[0] + covered, prev[1] + total)
+    return rates
+
+
+def check(xml_path: str, floors: dict) -> list[str]:
+    """Return human-readable failures for every package below floor."""
+    rates = package_rates(xml_path)
+    failures = []
+    for pkg, floor in floors.items():
+        hit = {f: ct for f, ct in rates.items()
+               if f.startswith(pkg.rstrip("/") + "/") or f == pkg}
+        if not hit:
+            failures.append(f"{pkg}: no files in report (is --cov set?)")
+            continue
+        covered = sum(c for c, _ in hit.values())
+        total = sum(t for _, t in hit.values())
+        pct = 100.0 * covered / total
+        status = "ok" if pct >= floor else "FAIL"
+        print(f"{pkg}: {pct:.1f}% (floor {floor}%) {status}")
+        if pct < floor:
+            failures.append(f"{pkg}: {pct:.1f}% < {floor}%")
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    """CLI entry point: ``coverage_floor.py report.xml pkg=floor ...``."""
+    if len(argv) < 3 or any("=" not in a for a in argv[2:]):
+        print(__doc__, file=sys.stderr)
+        return 2
+    floors = {}
+    for arg in argv[2:]:
+        pkg, floor = arg.rsplit("=", 1)
+        floors[pkg] = float(floor)
+    failures = check(argv[1], floors)
+    if failures:
+        print("coverage floors missed: " + "; ".join(failures),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
