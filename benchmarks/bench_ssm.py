@@ -71,6 +71,37 @@ def single_filter(smoke: bool) -> list[dict]:
     return rows
 
 
+def fused_filter(smoke: bool) -> list[dict]:
+    """Same loop with ``step_backend="fused"`` (DESIGN.md §13) — the
+    single-normalization weight phase; compare against ``single_filter``
+    rows at equal (family, N) for the fused speedup curve.  The
+    committed baseline records ≥ 1.5× composed at N = 1e6 on the
+    cheap-advance families (stochvol 2.2×, lgssm_cv2d 1.7×); Lorenz-96
+    gains less (~1.2×) because its RK4 advance, not the weight phase,
+    dominates (detailed head-to-head in BENCH_kernels.json)."""
+    import jax
+    from repro.core import SIRConfig
+    from repro.core.smc import run_sir
+
+    ns = (10_000, 100_000) if smoke else (10_000, 100_000, 1_000_000)
+    steps = 4 if smoke else 8
+    rows = []
+    for name, model in _families().items():
+        zs = _observations(model, steps)
+        for n in ns:
+            cfg = SIRConfig(n_particles=n, step_backend="fused")
+            fn = jax.jit(lambda key, z, c=cfg, m=model: run_sir(
+                key, m, c, z)[1].estimate)
+            jax.block_until_ready(fn(jax.random.key(1), zs))   # compile+warm
+            t0 = time.time()
+            jax.block_until_ready(fn(jax.random.key(1), zs))
+            dt = time.time() - t0
+            rows.append({"family": name, "particles": n, "steps": steps,
+                         "seconds": dt,
+                         "particles_per_sec": n * steps / dt})
+    return rows
+
+
 def bank_filter(smoke: bool) -> list[dict]:
     """FilterBank B=8 particles/s per family per N (per-member N)."""
     import jax
@@ -104,15 +135,22 @@ def run() -> list[dict]:
     committed full-size baseline)."""
     smoke = "--smoke" in sys.argv
     single = single_filter(smoke)
+    fused = fused_filter(smoke)
     bank = bank_filter(smoke)
     dest = DEST.replace(".json", ".smoke.json") if smoke else DEST
     with open(dest, "w") as f:
         json.dump({"smoke": smoke, "single_filter": single,
-                   "bank_filter": bank}, f, indent=1)
+                   "fused_filter": fused, "bank_filter": bank}, f, indent=1)
     rows = []
     for r in single:
         rows.append({
             "name": f"ssm/{r['family']}_n{r['particles']}",
+            "us_per_call": r["seconds"] * 1e6,
+            "derived": f"{r['particles_per_sec']:.0f} particles/s",
+        })
+    for r in fused:
+        rows.append({
+            "name": f"ssm/{r['family']}_fused_n{r['particles']}",
             "us_per_call": r["seconds"] * 1e6,
             "derived": f"{r['particles_per_sec']:.0f} particles/s",
         })

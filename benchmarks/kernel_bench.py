@@ -1,23 +1,43 @@
-"""Kernel-layer microbenchmarks (paper §V.E — likelihood is the hot spot).
+"""Kernel-layer benchmarks → BENCH_kernels.json (paper §V.E).
 
-Wall-clock timings compare the XLA reference paths at increasing N (the
-paper's O(N·N_pix) → O(N) image-patch claim shows as N-linear scaling
-independent of image size).  Pallas kernels are correctness-validated in
-interpret mode (timing interpret mode is meaningless); their TPU
-performance is modeled in the §Roofline analysis instead.
+Two suites:
+
+* **fused vs composed** — particles/second of the full SIR loop with
+  ``step_backend="fused"`` (the single-normalization weight phase from
+  ``repro.kernels.sir_fused``) against the historical composed path, on
+  the stochastic-volatility and linear-Gaussian families at
+  N ∈ {1e4, 1e5, 1e6}.  This is the number DESIGN.md §13 cites: the
+  composed path re-derives the softmax for the estimate, the ESS, the
+  log-normalizer, and the resampler, and round-trips ancestors through
+  counts→repeat; the fused path does each once.  Recorded CPU-XLA
+  speedups ≈ 1.7–3.3× (fused ≥ 1.5× composed at N = 1e6 on both
+  families is the regression gate this file's committed JSON anchors).
+
+* **micro** — wall-clock of the XLA reference kernels at increasing N
+  (the O(N·N_pix) → O(N) patch-likelihood claim shows as N-linear
+  scaling independent of image size), plus the per-scheme resampler
+  references.  Pallas kernels are correctness-validated in interpret
+  mode (timing interpret mode is meaningless); their TPU performance is
+  modeled in the roofline table (``benchmarks.roofline_table``).
+
+``--smoke`` (or ``benchmarks.run kernels --smoke``) shrinks N and
+writes the gitignored BENCH_kernels.smoke.json instead — CI proves the
+harness runs without overwriting the committed baseline.
 """
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import ops
-from repro.kernels import ref
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEST = os.path.join(REPO, "BENCH_kernels.json")
 
 
 def _bench(fn, *args, reps=5):
+    import jax
+
     out = fn(*args)
     jax.block_until_ready(out)
     t0 = time.time()
@@ -27,35 +47,120 @@ def _bench(fn, *args, reps=5):
     return (time.time() - t0) / reps
 
 
-def run() -> list[dict]:
+def fused_vs_composed(smoke: bool) -> list[dict]:
+    """jit(run_sir) particles/s per family × N × step backend."""
+    import jax
+    import numpy as np
+    from repro.core import SIRConfig
+    from repro.core.smc import run_sir
+    from repro.models import ssm
+
+    families = {
+        "stochvol": ssm.StochasticVolatilitySSM(),
+        "lgssm_cv2d": ssm.oracle_configs()["cv2d"],
+    }
+    ns = (10_000,) if smoke else (10_000, 100_000, 1_000_000)
+    steps = 4 if smoke else 8
+    rows = []
+    for name, model in families.items():
+        _, zs = ssm.simulate(jax.random.key(0), model, steps)
+        zs = np.asarray(zs)
+        for n in ns:
+            per_backend = {}
+            for backend in ("composed", "fused"):
+                cfg = SIRConfig(n_particles=n, step_backend=backend)
+                fn = jax.jit(lambda key, z, c=cfg, m=model: run_sir(
+                    key, m, c, z)[1].estimate)
+                jax.block_until_ready(fn(jax.random.key(1), zs))  # warm
+                t0 = time.time()
+                jax.block_until_ready(fn(jax.random.key(1), zs))
+                dt = time.time() - t0
+                per_backend[backend] = dt
+                rows.append({"family": name, "backend": backend,
+                             "particles": n, "steps": steps, "seconds": dt,
+                             "particles_per_sec": n * steps / dt})
+            rows[-1]["speedup_vs_composed"] = (
+                per_backend["composed"] / per_backend["fused"])
+    return rows
+
+
+def micro(smoke: bool) -> list[dict]:
+    """XLA reference-kernel wall clock (the pre-fused baseline set)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import resampling
+    from repro.kernels import ref
+
     key = jax.random.key(0)
     rows = []
+    sizes = [1 << 14] if smoke else [1 << 14, 1 << 17]
     # patch likelihood: N-scaling at two image sizes (patch claim)
     for h in [128, 512]:
         img = jax.random.normal(jax.random.fold_in(key, h), (h, h))
-        for n in [1 << 14, 1 << 17]:
+        for n in sizes:
             y = jax.random.uniform(key, (n,)) * h
             x = jax.random.uniform(jax.random.fold_in(key, 1), (n,)) * h
             i0 = jnp.ones((n,)) * 2
             f = jax.jit(lambda y, x, i0, img: ref.patch_log_likelihood_ref(
                 y, x, i0, img))
             dt = _bench(f, y, x, i0, img)
-            rows.append({"name": f"patch_lik_img{h}_n{n}",
-                         "us_per_call": dt * 1e6,
-                         "derived": f"ns_per_particle={dt/n*1e9:.1f}"})
-    # systematic resampling
-    for n in [1 << 14, 1 << 17, 1 << 20]:
+            rows.append({"name": f"patch_lik_img{h}_n{n}", "seconds": dt,
+                         "ns_per_particle": dt / n * 1e9})
+    # resampling: the comb reference vs the collective-free chains
+    rn = [1 << 14] if smoke else [1 << 14, 1 << 17, 1 << 20]
+    for n in rn:
         lw = jax.random.normal(key, (n,))
         f = jax.jit(lambda lw: ref.systematic_ancestors_ref(
             lw, jnp.asarray(0.5), lw.shape[0]))
         dt = _bench(f, lw)
-        rows.append({"name": f"resample_n{n}", "us_per_call": dt * 1e6,
-                     "derived": f"ns_per_particle={dt/n*1e9:.2f}"})
+        rows.append({"name": f"resample_systematic_n{n}", "seconds": dt,
+                     "ns_per_particle": dt / n * 1e9})
+        for scheme in sorted(resampling.COLLECTIVE_FREE):
+            g = jax.jit(lambda k, lw, s=scheme, m=n: resampling.RESAMPLERS[s](
+                k, lw, m, capacity=m))
+            dt = _bench(g, jax.random.key(1), lw)
+            rows.append({"name": f"resample_{scheme}_n{n}", "seconds": dt,
+                         "ns_per_particle": dt / n * 1e9})
     # attention reference (serving hot spot)
     q = jax.random.normal(key, (1, 8, 1024, 64))
     k = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 1024, 64))
     f = jax.jit(lambda q, k: ref.mha_ref(q, k, k, causal=True))
-    dt = _bench(f, q, k)
-    rows.append({"name": "mha_ref_L1024", "us_per_call": dt * 1e6,
-                 "derived": ""})
+    rows.append({"name": "mha_ref_L1024", "seconds": _bench(f, q, k),
+                 "ns_per_particle": None})
     return rows
+
+
+def run() -> list[dict]:
+    """benchmarks.run entry point — writes BENCH_kernels.json (smoke
+    runs write the gitignored BENCH_kernels.smoke.json and never touch
+    the committed full-size baseline)."""
+    smoke = "--smoke" in sys.argv
+    fused = fused_vs_composed(smoke)
+    micro_rows = micro(smoke)
+    dest = DEST.replace(".json", ".smoke.json") if smoke else DEST
+    with open(dest, "w") as f:
+        json.dump({"smoke": smoke, "fused_vs_composed": fused,
+                   "micro": micro_rows}, f, indent=1)
+    rows = []
+    for r in fused:
+        extra = (f" {r['speedup_vs_composed']:.2f}x vs composed"
+                 if "speedup_vs_composed" in r else "")
+        rows.append({
+            "name": f"sir_{r['backend']}/{r['family']}_n{r['particles']}",
+            "us_per_call": r["seconds"] * 1e6,
+            "derived": f"{r['particles_per_sec']:.0f} particles/s{extra}",
+        })
+    for r in micro_rows:
+        d = (f"ns_per_particle={r['ns_per_particle']:.2f}"
+             if r["ns_per_particle"] is not None else "")
+        rows.append({"name": r["name"], "us_per_call": r["seconds"] * 1e6,
+                     "derived": d})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    _dest = (DEST.replace(".json", ".smoke.json")
+             if "--smoke" in sys.argv else DEST)
+    print(f"wrote {_dest}", file=sys.stderr)

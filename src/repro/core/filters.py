@@ -285,6 +285,10 @@ def make_bank_step(model: ssm_base.StateSpaceModel, sir: smc.SIRConfig):
     carry bitwise frozen and emit zeroed outputs
     (``smc.make_masked_step``); active slots reproduce the standalone
     ``make_sir_step`` bitwise.
+
+    ``sir.step_backend`` flows through unchanged: a bank built with
+    ``step_backend="fused"`` vmaps the fused step (DESIGN.md §13.1), so
+    banked and served paths pick the backend purely via ``SIRConfig``.
     """
     return jax.vmap(smc.make_masked_step(smc.make_sir_step(model, sir)))
 

@@ -1,6 +1,12 @@
 """Local resampling algorithms (paper Alg. 1, line 17).
 
-Four classical schemes.  Each has two output forms:
+Four classical comb/CDF schemes plus the two *collective-free* schemes
+of McAlinn–Nakatsuma (arXiv:1212.1639) and Murray–Lee–Jacob
+(arXiv:1301.4019) — Metropolis and rejection resampling — which need no
+global prefix sum: every output slot runs an independent chain of
+weight-ratio comparisons, so the algorithms map onto parallel hardware
+with no cross-lane dependency at all (DESIGN.md §13.2).  Each scheme
+has two output forms:
 
 * ``*_ancestors``: ``(n_out,)`` int32 ancestor indices — the materialized
   form used by single-device SIR.
@@ -129,6 +135,166 @@ def residual_counts(key: Array, log_weights: Array, n_out, capacity: int | None 
 
 
 # ---------------------------------------------------------------------------
+# Collective-free schemes (Metropolis / rejection) — no prefix sum
+# ---------------------------------------------------------------------------
+
+# Default draw budget per lane (chain length / tries).  Both schemes
+# leave every lane within total-variation distance
+# ``(1 − 1/(N·w_max))^B`` of the target law (the Dobrushin bound for
+# Metropolis; acceptance mass for rejection — derivation in
+# ``tests/stats.py::chain_bias_ceiling``), so the bias decays
+# geometrically in the budget but NEVER reaches zero for skewed
+# weights: unlike the comb schemes these are asymptotically, not
+# exactly, unbiased, and the statistical gates carry an explicit bias
+# term (tests/test_ssm_contract.py, tests/test_ssm_oracle.py).  32
+# keeps the residual below those gates at every tested weight profile
+# while the precomputed-draw arrays stay ``(N, 32)`` — the memory knob.
+METROPOLIS_ITERS = 32
+REJECTION_TRIES = 32
+
+
+def _dead_slot_guard(ancestors: Array, log_weights: Array) -> Array:
+    """Redirect lanes whose final slot has zero weight to the argmax slot.
+
+    A chain that never saw a finite-weight proposal (possible only under
+    extreme degeneracy — e.g. all mass on one particle, where the
+    uniform proposal almost never finds it) would otherwise keep its
+    dead starting slot; the stationary law puts zero mass there, so the
+    redirect can only shrink the bias, and it makes the all-mass-on-one
+    limit exact.
+    """
+    hot = jnp.argmax(log_weights).astype(jnp.int32)
+    return jnp.where(jnp.isfinite(log_weights[ancestors]), ancestors, hot)
+
+
+def metropolis_ancestors_from_draws(log_weights: Array, proposals: Array,
+                                    log_us: Array) -> Array:
+    """Metropolis-chain ancestors from precomputed draws.
+
+    Lane ``l`` starts at ancestor ``l % n_in`` and runs ``B`` Metropolis
+    steps with uniform proposals: accept proposal ``j`` over the current
+    ancestor ``a`` iff ``log u < lw[j] - lw[a]`` (the ratio ``w_j/w_a``
+    in log space — weight *normalization never enters*, which is what
+    makes the scheme collective-free).  ``proposals``/``log_us`` are
+    ``(lanes, B)``; passing the draws explicitly is what lets the Pallas
+    kernel (``repro.kernels.resample.metropolis_ancestors_kernel``)
+    reproduce this reference exactly, comparison for comparison.
+    Lanes still sitting on a zero-weight slot after the chain take the
+    argmax slot (``_dead_slot_guard``).
+    """
+    n_in = log_weights.shape[0]
+    lanes = jnp.arange(proposals.shape[0], dtype=jnp.int32)
+    a0 = jnp.remainder(lanes, n_in)
+
+    def body(b, a):
+        j = proposals[:, b]
+        accept = log_us[:, b] < log_weights[j] - log_weights[a]
+        return jnp.where(accept, j, a)
+
+    a = jax.lax.fori_loop(0, proposals.shape[1], body, a0)
+    return _dead_slot_guard(a, log_weights)
+
+
+def rejection_ancestors_from_draws(log_weights: Array, proposals: Array,
+                                   log_us: Array) -> Array:
+    """Rejection-sampling ancestors from precomputed draws.
+
+    The first half of the draw budget runs pure rejection: lane ``l``
+    accepts the first proposal ``j`` with ``log u < lw[j] − max(lw)``
+    (i.e. ``u < w_j / w_max`` — only the *max* weight is needed, a
+    cheap reduction, never a prefix sum); accepted lanes are exact
+    multinomial draws.  Lanes that exhaust their tries switch to a
+    Metropolis chain over the second half of the draws (Murray, Lee &
+    Jacob's practical cap for the unbounded sampler, arXiv:1301.4019
+    §4) — the independent fallback keeps the combined per-lane TV bias
+    at ``(1 − ā)^B`` for the FULL budget ``B`` while avoiding the
+    ensemble collapse an argmax fallback causes at low acceptance
+    rates ``ā = 1/(N·w_max)`` (DESIGN.md §13.2).  Dead final slots
+    redirect to argmax exactly as in the Metropolis scheme.
+    """
+    m = jnp.max(log_weights)
+    n_in = log_weights.shape[0]
+    lanes = jnp.arange(proposals.shape[0], dtype=jnp.int32)
+    budget = proposals.shape[1]
+    tries = budget // 2
+
+    def rej_body(r, carry):
+        a, accepted = carry
+        j = proposals[:, r]
+        acc = log_us[:, r] < log_weights[j] - m
+        a = jnp.where(jnp.logical_and(acc, jnp.logical_not(accepted)), j, a)
+        return a, jnp.logical_or(accepted, acc)
+
+    a_rej, accepted = jax.lax.fori_loop(
+        0, tries, rej_body,
+        (jnp.zeros(lanes.shape, jnp.int32), jnp.zeros(lanes.shape, bool)))
+
+    def mh_body(b, a):
+        j = proposals[:, b]
+        accept = log_us[:, b] < log_weights[j] - log_weights[a]
+        return jnp.where(accept, j, a)
+
+    a_mh = jax.lax.fori_loop(tries, budget, mh_body,
+                             jnp.remainder(lanes, n_in))
+    return _dead_slot_guard(jnp.where(accepted, a_rej, a_mh), log_weights)
+
+
+def resampling_draws(key: Array, n_in: int, lanes: int,
+                     iters: int) -> tuple[Array, Array]:
+    """The ``(proposals, log_us)`` pair consumed by the collective-free
+    schemes: ``(lanes, iters)`` uniform slot indices and log-uniforms.
+    Shared by the jnp references and the Pallas kernel entry points so
+    both consume identical randomness."""
+    kp, ku = jax.random.split(key)
+    proposals = jax.random.randint(kp, (lanes, iters), 0, n_in, jnp.int32)
+    log_us = jnp.log(jax.random.uniform(ku, (lanes, iters)))
+    return proposals, log_us
+
+
+def _lanes_to_counts(ancestors: Array, n_in: int, n_out,
+                     capacity: int) -> Array:
+    """Histogram per-lane ancestors into counts, masking lanes ≥ n_out
+    (``n_out`` may be traced ≤ capacity, DESIGN.md §2.1)."""
+    valid = jnp.arange(capacity) < n_out
+    counts = jnp.zeros((n_in,), jnp.int32)
+    return counts.at[jnp.where(valid, ancestors, 0)].add(
+        jnp.where(valid, 1, 0))
+
+
+def metropolis_counts(key: Array, log_weights: Array, n_out,
+                      capacity: int | None = None, *,
+                      iters: int = METROPOLIS_ITERS) -> Array:
+    """Metropolis resampling (collective-free, arXiv:1212.1639 §3).
+
+    Asymptotically unbiased in the chain length ``iters``; the default
+    keeps the bias far below the repo's 5-sigma gates (see
+    ``METROPOLIS_ITERS``).  No CDF, no prefix sum, no normalization.
+    """
+    capacity = capacity or log_weights.shape[0]
+    proposals, log_us = resampling_draws(key, log_weights.shape[0],
+                                         capacity, iters)
+    anc = metropolis_ancestors_from_draws(log_weights, proposals, log_us)
+    return _lanes_to_counts(anc, log_weights.shape[0], n_out, capacity)
+
+
+def rejection_counts(key: Array, log_weights: Array, n_out,
+                     capacity: int | None = None, *,
+                     tries: int = REJECTION_TRIES) -> Array:
+    """Rejection resampling (collective-free, arXiv:1301.4019 §4).
+
+    Exactly multinomial on every lane whose try budget hits; exhausted
+    lanes run a Metropolis fallback chain on the remaining draws
+    (``rejection_ancestors_from_draws``).  Needs only ``max(lw)`` — a
+    cheap reduction, never a prefix sum.
+    """
+    capacity = capacity or log_weights.shape[0]
+    proposals, log_us = resampling_draws(key, log_weights.shape[0],
+                                         capacity, tries)
+    anc = rejection_ancestors_from_draws(log_weights, proposals, log_us)
+    return _lanes_to_counts(anc, log_weights.shape[0], n_out, capacity)
+
+
+# ---------------------------------------------------------------------------
 # Ancestor-form wrappers (single-device SIR path)
 # ---------------------------------------------------------------------------
 
@@ -144,10 +310,19 @@ systematic_ancestors = _as_ancestors(systematic_counts)
 stratified_ancestors = _as_ancestors(stratified_counts)
 multinomial_ancestors = _as_ancestors(multinomial_counts)
 residual_ancestors = _as_ancestors(residual_counts)
+metropolis_ancestors = _as_ancestors(metropolis_counts)
+rejection_ancestors = _as_ancestors(rejection_counts)
 
 RESAMPLERS = {
     "systematic": systematic_counts,
     "stratified": stratified_counts,
     "multinomial": multinomial_counts,
     "residual": residual_counts,
+    "metropolis": metropolis_counts,
+    "rejection": rejection_counts,
 }
+
+# Schemes with no cross-lane dependency (no CDF / prefix sum): eligible
+# for the fused-step fast path and the standalone Pallas kernels in
+# ``repro.kernels.resample`` (DESIGN.md §13.2).
+COLLECTIVE_FREE = ("metropolis", "rejection")

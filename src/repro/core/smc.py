@@ -36,6 +36,7 @@ from repro.core import particles
 from repro.core import resampling
 from repro.core import runtime
 from repro.core.particles import ParticleEnsemble, effective_sample_size
+from repro.kernels import sir_fused
 from repro.models.ssm import base as ssm_base
 
 Array = jax.Array
@@ -103,15 +104,29 @@ class SIRConfig:
       n_particles: global particle count ``N`` (distributed runs split it
         into ``N / P`` slots per shard).
       resampler: key into ``repro.core.resampling.RESAMPLERS``
-        (``systematic`` / ``stratified`` / ``multinomial`` / ``residual``).
+        (``systematic`` / ``stratified`` / ``multinomial`` / ``residual``
+        / the collective-free ``metropolis`` / ``rejection``).
       ess_frac: resample when ``N_eff < ess_frac * N`` (Alg. 1 line 15).
       always_resample: resample every frame regardless of ESS.
+      step_backend: ``"composed"`` runs reweight → estimate → ESS →
+        resample as separate ops (the historical, golden-pinned path);
+        ``"fused"`` runs the whole weight phase through
+        ``repro.kernels.sir_fused`` — one normalization shared by every
+        statistic, ancestors without the counts round-trip, and the
+        Pallas megakernel on TPU (DESIGN.md §13).  Configs a fused step
+        cannot honor (a comb-only resampler, the per-shard DRA step)
+        fall back to the composed path automatically.
+      fused_backend: optional override of the fused execution backend
+        (``"pallas"`` / ``"interpret"`` / ``"xla"``); ``None`` resolves
+        from the platform like the rest of the kernel layer.
     """
 
     n_particles: int = 4096
     resampler: str = "systematic"
     ess_frac: float = 0.5           # resample when N_eff < ess_frac * N
     always_resample: bool = False
+    step_backend: str = "composed"  # "composed" | "fused" (DESIGN.md §13.1)
+    fused_backend: str | None = None
 
 
 class SIRCarry(NamedTuple):
@@ -177,7 +192,17 @@ def make_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig):
     suitable for ``jax.lax.scan`` over an observation stack; the reference
     semantics every other execution path (bank, distributed, resident
     sessions) is pinned against.
+
+    With ``cfg.step_backend == "fused"`` the weight phase (reweight /
+    estimate / ESS / resampling commit) runs through
+    ``repro.kernels.sir_fused`` instead of the composed ops — same PRNG
+    stream split, same decision rule, ulp-level numerics (DESIGN.md §13);
+    unsupported configs fall back to the composed step here rather than
+    erroring, so drivers never branch on backend.
     """
+    if cfg.step_backend == "fused" and sir_fused.fused_applicable(
+            cfg.resampler):
+        return _make_fused_sir_step(model, cfg)
     n = cfg.n_particles
 
     def step(carry: SIRCarry, observation):
@@ -192,14 +217,46 @@ def make_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig):
                            resampler=cfg.resampler,
                            always=cfg.always_resample)
         state = jax.tree_util.tree_map(lambda x: x[dec.ancestors], ens.state)
+        # N·max(w): the weight-skew diagnostic the chain-resampler bias
+        # gates consume (tests/stats.py ``chain_tv_profile``) — 1 at
+        # uniform weights, N at full collapse.
+        skew = n * jnp.exp(jnp.max(ens.log_weights) - dec.log_z)
         # invariant: logsumexp(lw) == 0 entering every step, so ``log_z`` IS
         # the marginal-likelihood increment log p(z_k | Z^{k-1}).
         lw = jnp.where(dec.resampled,
                        jnp.full_like(ens.log_weights, -jnp.log(n)),
                        ens.log_weights - dec.log_z)
         ens = ens.replace(state=state, log_weights=lw)
+        out = StepOutput(estimate, dec.ess, dec.log_z, dec.resampled,
+                         {"weight_skew": skew})
+        return SIRCarry(key, ens), out
 
-        out = StepOutput(estimate, dec.ess, dec.log_z, dec.resampled, {})
+    return step
+
+
+def _make_fused_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig):
+    """The fused-backend SIR step (DESIGN.md §13.1).
+
+    Identical control flow and PRNG stream to the composed step — split
+    into (carry, dynamics, resample) keys, advance, one likelihood call —
+    with the entire weight phase delegated to
+    ``repro.kernels.sir_fused.fused_weight_step`` and the resampling
+    gather applied to the decision it returns.
+    """
+
+    def step(carry: SIRCarry, observation):
+        key, ens = carry
+        key, k_dyn, k_res = jax.random.split(key, 3)
+        ens = particles.advance(ens, k_dyn, model.transition_sample)
+        ll = model.observation_log_prob(ens.state, observation)
+        dec = sir_fused.fused_weight_step(
+            ens.log_weights, ll, ens.state, k_res,
+            resampler=cfg.resampler, ess_frac=cfg.ess_frac,
+            always=cfg.always_resample, backend=cfg.fused_backend)
+        state = jax.tree_util.tree_map(lambda x: x[dec.ancestors], ens.state)
+        ens = ens.replace(state=state, log_weights=dec.new_log_weights)
+        out = StepOutput(dec.estimate, dec.ess, dec.log_z, dec.resampled,
+                         {"weight_skew": dec.weight_skew})
         return SIRCarry(key, ens), out
 
     return step

@@ -120,3 +120,120 @@ def systematic_ancestors_auto(log_weights: Array, u: Array, *,
     return systematic_ancestors_kernel(
         log_weights, u, n_out=n_out, block=pick_block(n_out),
         interpret=jax.default_backend() != "tpu")
+
+
+# ---------------------------------------------------------------------------
+# Collective-free resamplers (Metropolis / rejection, DESIGN.md §13.2)
+#
+# Neither scheme needs the global CDF, so — unlike the systematic kernel
+# above — there is NO sequential build pass and NO prefix sum: every
+# output lane runs an independent chain of weight-ratio comparisons
+# against the full log-weight vector resident in VMEM.  The random draws
+# (proposal indices + log-uniforms) are precomputed by the caller with
+# ``repro.core.resampling.resampling_draws`` so the kernels reproduce the
+# jnp references *exactly*, comparison for comparison (pinned by
+# tests/test_resampling_prop.py).
+# ---------------------------------------------------------------------------
+
+
+def _metropolis_kernel(lw_ref, prop_ref, logu_ref, anc_ref, *, n_in: int,
+                       block: int, iters: int):
+    i = pl.program_id(0)
+    lw = lw_ref[...]
+    lane = i * block + jax.lax.iota(jnp.int32, block)
+    a = jax.lax.rem(lane, n_in)
+    for b in range(iters):        # static chain length — fully unrolled
+        j = prop_ref[:, b]
+        accept = logu_ref[:, b] < lw[j] - lw[a]
+        a = jnp.where(accept, j, a)
+    hot = jnp.argmax(lw).astype(jnp.int32)
+    anc_ref[...] = jnp.where(jnp.isfinite(lw[a]), a, hot)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def metropolis_ancestors_kernel(log_weights: Array, proposals: Array,
+                                log_us: Array, *, block: int = DEFAULT_BLOCK,
+                                interpret: bool = False) -> Array:
+    """Metropolis-resampling ancestors (arXiv:1212.1639 §3).
+
+    ``proposals``/``log_us`` are the ``(n_out, iters)`` draws from
+    ``resampling_draws``; matches
+    ``resampling.metropolis_ancestors_from_draws`` bit for bit.
+    """
+    n_in = log_weights.shape[0]
+    n_out, iters = proposals.shape
+    assert n_out % block == 0, (n_out, block)
+    kernel = functools.partial(_metropolis_kernel, n_in=n_in, block=block,
+                               iters=iters)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_out // block,),
+        in_specs=[
+            pl.BlockSpec((n_in,), lambda i: (0,)),        # full weights
+            pl.BlockSpec((block, iters), lambda i: (i, 0)),
+            pl.BlockSpec((block, iters), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.int32),
+        interpret=interpret,
+    )(log_weights, proposals, log_us)
+
+
+def _rejection_kernel(lw_ref, prop_ref, logu_ref, anc_ref, *, n_in: int,
+                      block: int, tries: int):
+    i = pl.program_id(0)
+    lw = lw_ref[...]
+    m = jnp.max(lw)
+    a = jnp.zeros(anc_ref.shape, jnp.int32)
+    accepted = jnp.zeros(anc_ref.shape, jnp.bool_)
+    half = tries // 2
+    for r in range(half):         # rejection phase — fully unrolled
+        j = prop_ref[:, r]
+        acc = logu_ref[:, r] < lw[j] - m
+        a = jnp.where(jnp.logical_and(acc, jnp.logical_not(accepted)), j, a)
+        accepted = jnp.logical_or(accepted, acc)
+    lane = i * block + jax.lax.iota(jnp.int32, block)
+    b = jax.lax.rem(lane, n_in)
+    for r in range(half, tries):  # Metropolis fallback chain
+        j = prop_ref[:, r]
+        acc = logu_ref[:, r] < lw[j] - lw[b]
+        b = jnp.where(acc, j, b)
+    a = jnp.where(accepted, a, b)
+    hot = jnp.argmax(lw).astype(jnp.int32)
+    anc_ref[...] = jnp.where(jnp.isfinite(lw[a]), a, hot)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def rejection_ancestors_kernel(log_weights: Array, proposals: Array,
+                               log_us: Array, *, block: int = DEFAULT_BLOCK,
+                               interpret: bool = False) -> Array:
+    """Rejection-resampling ancestors (arXiv:1301.4019 §4).
+
+    First half of the draw budget is pure rejection, second half the
+    Metropolis fallback chain for exhausted lanes, dead final slots
+    redirect to argmax — exactly as
+    ``resampling.rejection_ancestors_from_draws`` does.
+    """
+    n_in = log_weights.shape[0]
+    n_out, tries = proposals.shape
+    assert n_out % block == 0, (n_out, block)
+    kernel = functools.partial(_rejection_kernel, n_in=n_in, block=block,
+                               tries=tries)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_out // block,),
+        in_specs=[
+            pl.BlockSpec((n_in,), lambda i: (0,)),
+            pl.BlockSpec((block, tries), lambda i: (i, 0)),
+            pl.BlockSpec((block, tries), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.int32),
+        interpret=interpret,
+    )(log_weights, proposals, log_us)
+
+
+COLLECTIVE_FREE_KERNELS = {
+    "metropolis": metropolis_ancestors_kernel,
+    "rejection": rejection_ancestors_kernel,
+}

@@ -161,6 +161,9 @@ class ParticleSessionServer:
       model: any ``repro.models.ssm.StateSpaceModel`` — every
         session filters with it.
       sir: per-session SIR configuration (``n_particles`` per slot).
+        ``sir.step_backend="fused"`` serves every slot with the fused
+        step (DESIGN.md §13.1) — the server adds no backend logic of
+        its own, it inherits whatever ``filters.make_bank_step`` builds.
       capacity: ``B_max`` — the static slot count of the resident bank.
       mesh: optional device mesh; slots are sharded over ``bank_axis``
         (each session lives wholly on one device — sessions are the unit

@@ -121,6 +121,85 @@ def test_resample_kernel_degenerate_weights():
     assert (np.asarray(got) == 337).all()
 
 
+@pytest.mark.parametrize("scheme", ["metropolis", "rejection"])
+@pytest.mark.parametrize("n_in,n_out,iters,block", [
+    (256, 512, 8, 128), (1000, 1024, 32, 256), (4096, 4096, 32, 1024),
+])
+def test_collective_free_kernels_exact(scheme, n_in, n_out, iters, block):
+    """Chain-resampler kernels against their jnp references on SHARED
+    precomputed draws — exact int equality, no tie tolerance (the
+    kernels replay the same comparisons; DESIGN.md §13.2).  The full
+    shape/edge-case sweep lives in tests/test_resampling_prop.py."""
+    from repro.core import resampling
+    from repro.kernels.resample import COLLECTIVE_FREE_KERNELS
+    lw = jax.random.normal(jax.random.fold_in(KEY, n_in), (n_in,)) * 3
+    proposals, log_us = resampling.resampling_draws(
+        jax.random.fold_in(KEY, n_out), n_in, n_out, iters)
+    got = COLLECTIVE_FREE_KERNELS[scheme](lw, proposals, log_us,
+                                          block=block, interpret=True)
+    want = (resampling.metropolis_ancestors_from_draws
+            if scheme == "metropolis"
+            else resampling.rejection_ancestors_from_draws)(
+        lw, proposals, log_us)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("resampler", ["systematic", "metropolis",
+                                       "rejection"])
+def test_fused_megakernel_matches_ref(resampler):
+    """The fused SIR weight-phase megakernel (interpret mode) against
+    its pure-jnp reference on a dict pytree state: ancestors / ESS /
+    log-Z / new log-weights / weight-skew exact, estimate to f32
+    accumulation tolerance (DESIGN.md §13.1)."""
+    from repro.kernels import sir_fused
+    n = 2048
+    ks = jax.random.split(jax.random.fold_in(KEY, 21), 4)
+    lw = jax.random.normal(ks[0], (n,)) * 0.1 - np.log(n)
+    ll = jax.random.normal(ks[1], (n,)) * 2.0
+    state = {"x": jax.random.normal(ks[2], (n, 3)),
+             "v": jax.random.normal(ks[3], (n,))}
+    key = jax.random.fold_in(KEY, 33)
+    got = sir_fused.fused_weight_step(lw, ll, state, key,
+                                      resampler=resampler, ess_frac=0.9,
+                                      backend="interpret")
+    want = sir_fused.fused_weight_step_ref(lw, ll, state, key,
+                                           resampler=resampler,
+                                           ess_frac=0.9)
+    np.testing.assert_array_equal(np.asarray(got.ancestors),
+                                  np.asarray(want.ancestors))
+    assert bool(got.resampled) and bool(want.resampled)
+    np.testing.assert_array_equal(np.asarray(got.ess), np.asarray(want.ess))
+    np.testing.assert_array_equal(np.asarray(got.log_z),
+                                  np.asarray(want.log_z))
+    np.testing.assert_array_equal(np.asarray(got.new_log_weights),
+                                  np.asarray(want.new_log_weights))
+    np.testing.assert_array_equal(np.asarray(got.weight_skew),
+                                  np.asarray(want.weight_skew))
+    for leaf_got, leaf_want in zip(jax.tree_util.tree_leaves(got.estimate),
+                                   jax.tree_util.tree_leaves(want.estimate)):
+        np.testing.assert_allclose(leaf_got, leaf_want, rtol=2e-6,
+                                   atol=2e-6)
+
+
+def test_fused_megakernel_no_resample_is_identity():
+    """Below the ESS trigger the fused step must emit the identity
+    ancestors and normalized (not reset) weights."""
+    from repro.kernels import sir_fused
+    n = 1024
+    lw = jnp.full((n,), -np.log(n))
+    ll = jax.random.normal(jax.random.fold_in(KEY, 44), (n,)) * 0.01
+    state = jax.random.normal(jax.random.fold_in(KEY, 45), (n, 2))
+    got = sir_fused.fused_weight_step(lw, ll, state,
+                                      jax.random.fold_in(KEY, 46),
+                                      resampler="systematic", ess_frac=0.5,
+                                      backend="interpret")
+    assert not bool(got.resampled)
+    np.testing.assert_array_equal(np.asarray(got.ancestors), np.arange(n))
+    np.testing.assert_allclose(
+        np.exp(np.asarray(got.new_log_weights, np.float64)).sum(), 1.0,
+        rtol=1e-5)
+
+
 @pytest.mark.parametrize("b,hq,hkv,lq,lk,d,causal,cap", [
     (2, 4, 2, 256, 256, 64, True, 0.0),
     (1, 8, 1, 128, 512, 64, True, 0.0),     # MQA, chunked-prefill Lq<Lk

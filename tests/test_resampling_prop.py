@@ -1,0 +1,265 @@
+"""Kernel-vs-jnp resampling equivalence, fixed edge cases + hypothesis.
+
+Two layers, same check functions:
+
+* the parametrized edge-case sweeps always run (non-power-of-two N,
+  ``n_out != n_in``, degenerate weights, ``-inf`` rows, single
+  particle) — the gate stays live without the hypothesis dev extra,
+  like tests/test_ssm_contract.py;
+* the hypothesis suite explores the same checks over arbitrary shapes
+  and weight profiles, and skips (not fails) when hypothesis is
+  missing, like the sibling ``*_prop`` modules.
+
+Equivalence contracts: the collective-free kernels
+(``repro.kernels.resample.COLLECTIVE_FREE_KERNELS``) consume the SAME
+precomputed draws as the jnp references, so they must match *exactly*,
+int for int.  The systematic kernel recomputes the CDF in-kernel, so
+1-ulp cumsum ties may flip an ancestor by one index between lowerings
+— same ≤1-index / ≤0.5 % tolerance as tests/test_kernels.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import stats
+
+from repro.core import resampling
+from repro.kernels import ref
+from repro.kernels import resample as resample_kernels
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # minimal env: fixed sweeps below still run
+    HAS_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# Check functions (shared by the fixed sweeps and the hypothesis suite)
+# ---------------------------------------------------------------------------
+
+def check_systematic_kernel_matches_ref(log_weights, u, n_out: int):
+    """Pallas systematic ancestors vs the jnp oracle: every ancestor
+    within 1 index, ≤0.5 % (min 1) tie flips, and both outputs sorted
+    (the comb is monotone in the output position)."""
+    lw = jnp.asarray(log_weights, jnp.float32)
+    block = resample_kernels.pick_block(n_out)
+    got = np.asarray(resample_kernels.systematic_ancestors_kernel(
+        lw, jnp.asarray(u, jnp.float32), n_out=n_out, block=block,
+        interpret=True))
+    want = np.asarray(ref.systematic_ancestors_ref(
+        lw, jnp.asarray(u, jnp.float32), n_out))
+    diff = np.abs(got.astype(np.int64) - want.astype(np.int64))
+    assert diff.max() <= 1, (diff.max(), n_out, block)
+    assert (diff != 0).sum() <= max(1, int(0.005 * n_out)), (
+        (diff != 0).mean(), n_out)
+    assert (np.diff(got) >= 0).all() and (np.diff(want) >= 0).all()
+    return got, want
+
+
+def check_collective_free_kernel_exact(scheme: str, log_weights,
+                                       n_out: int, iters: int, seed: int):
+    """Chain-scheme kernel vs jnp reference on shared draws: exact."""
+    lw = jnp.asarray(log_weights, jnp.float32)
+    n_in = lw.shape[0]
+    proposals, log_us = resampling.resampling_draws(
+        jax.random.key(seed), n_in, n_out, iters)
+    got = resample_kernels.COLLECTIVE_FREE_KERNELS[scheme](
+        lw, proposals, log_us, block=resample_kernels.pick_block(n_out),
+        interpret=True)
+    want = (resampling.metropolis_ancestors_from_draws
+            if scheme == "metropolis"
+            else resampling.rejection_ancestors_from_draws)(
+        lw, proposals, log_us)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    return np.asarray(got)
+
+
+def _random_lw(n_in: int, seed: int, scale: float = 3.0):
+    return jax.random.normal(jax.random.key(seed), (n_in,)) * scale
+
+
+# ---------------------------------------------------------------------------
+# Fixed edge-case sweeps (always run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_in,n_out", [
+    (256, 256),         # pow2, square
+    (1000, 1000),       # non-power-of-two N
+    (1000, 1528),       # n_out != n_in, both non-pow2 (block 8)
+    (7, 13),            # odd/odd, degenerate block 1
+    (5, 64),            # n_out >> n_in
+    (2048, 512),        # downsampling
+])
+@pytest.mark.parametrize("u", [0.0, 0.37, 0.999])
+def test_systematic_kernel_shapes(n_in, n_out, u):
+    check_systematic_kernel_matches_ref(_random_lw(n_in, n_in + n_out),
+                                        u, n_out)
+
+
+@pytest.mark.parametrize("scheme", sorted(resampling.COLLECTIVE_FREE))
+@pytest.mark.parametrize("n_in,n_out,iters", [
+    (256, 512, 8),
+    (1000, 1024, 32),   # non-power-of-two N
+    (1000, 1528, 32),   # n_out != n_in, non-pow2 out
+    (7, 13, 32),        # odd/odd
+    (5, 64, 32),
+])
+def test_collective_free_kernel_shapes(scheme, n_in, n_out, iters):
+    check_collective_free_kernel_exact(scheme, _random_lw(n_in, n_in),
+                                       n_out, iters, seed=n_out + iters)
+
+
+@pytest.mark.parametrize("scheme", sorted(resampling.COLLECTIVE_FREE))
+def test_all_mass_on_one_particle_is_exact(scheme):
+    """The degenerate limit: every lane must select the single live
+    particle — the dead-slot guard makes this exact, not just likely
+    (``resampling._dead_slot_guard``)."""
+    lw = jnp.full((512,), -jnp.inf).at[337].set(0.0)
+    anc = check_collective_free_kernel_exact(scheme, lw, 512, 32, seed=1)
+    assert (anc == 337).all()
+
+
+def test_systematic_kernel_all_mass_on_one_particle():
+    lw = jnp.full((512,), -1e4).at[337].set(0.0)
+    got, _ = check_systematic_kernel_matches_ref(lw, 0.5, 512)
+    assert (got == 337).all()
+
+
+@pytest.mark.parametrize("scheme", sorted(resampling.COLLECTIVE_FREE))
+def test_minus_inf_rows_never_selected(scheme):
+    """−inf log-weights (dead compressed slots) get zero offspring,
+    kernel and reference alike."""
+    lw = _random_lw(64, 9).at[jnp.asarray([0, 7, 8, 33])].set(-jnp.inf)
+    anc = check_collective_free_kernel_exact(scheme, lw, 64, 32, seed=2)
+    assert not np.isin(anc, [0, 7, 8, 33]).any()
+    counts = resampling.RESAMPLERS[scheme](jax.random.key(3), lw, 64,
+                                           capacity=64)
+    assert int(counts[0] + counts[7] + counts[8] + counts[33]) == 0
+
+
+def test_systematic_kernel_minus_inf_rows():
+    lw = _random_lw(64, 9).at[jnp.asarray([0, 7, 8, 33])].set(-jnp.inf)
+    got, want = check_systematic_kernel_matches_ref(lw, 0.37, 64)
+    assert not np.isin(got, [0, 7, 8, 33]).any()
+
+
+@pytest.mark.parametrize("scheme", sorted(resampling.COLLECTIVE_FREE))
+def test_single_particle(scheme):
+    anc = check_collective_free_kernel_exact(
+        scheme, jnp.zeros((1,)), 8, 32, seed=4)
+    assert (anc == 0).all()
+
+
+def test_systematic_kernel_single_particle():
+    got, _ = check_systematic_kernel_matches_ref(jnp.zeros((1,)), 0.37, 8)
+    assert (got == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Chain-scheme statistical gates that need scheme-specific knobs
+# (the generic 5-sigma gate over all RESAMPLERS lives in
+# tests/test_ssm_contract.py)
+# ---------------------------------------------------------------------------
+
+def _chain_fn(scheme, lw, n, budget):
+    kw = ({"iters": budget} if scheme == "metropolis" else {"tries": budget})
+    return jax.jit(lambda k: resampling.RESAMPLERS[scheme](
+        k, lw, n, capacity=n, **kw))
+
+
+@pytest.mark.parametrize("scheme", sorted(resampling.COLLECTIVE_FREE))
+def test_truncated_budget_fails_the_gate(scheme):
+    """Non-vacuity of the bias-aware 5-sigma gate: a deliberately
+    truncated budget (2 draws/lane) is visibly biased toward the chains'
+    uniform start and must FAIL the gate that the default budget of 32
+    passes — the gate can actually catch an under-converged resampler.
+    The ceiling itself is also checked against its vacuity guard: at
+    budget 2 it exceeds the 5 %·n_out cap the oracle gates enforce.
+    """
+    n = 64
+    lw = jnp.asarray(np.random.default_rng(0).normal(size=n) * 2.0,
+                     jnp.float32)
+    keys = [jax.random.key(i) for i in range(400)]
+    mean, expected, threshold = stats.resampling_mean_counts(
+        _chain_fn(scheme, lw, n, 2), keys, lw, n)
+    dev = np.abs(mean - expected)
+    ceiling32 = stats.chain_bias_ceiling(lw, 32, n)
+    assert np.any(dev > threshold + ceiling32), (
+        f"{scheme}: truncated chain passed the default-budget gate")
+    assert stats.chain_bias_ceiling(lw, 2, n) > 0.05 * n
+    assert ceiling32 <= 0.05 * n
+
+
+@pytest.mark.parametrize("scheme", sorted(resampling.COLLECTIVE_FREE))
+@pytest.mark.parametrize("profile_seed,scale", [(7, 1.0), (0, 2.0), (3, 3.0)])
+def test_chain_bias_within_ceiling(scheme, profile_seed, scale):
+    """Empirical mean-count bias over 400 replicates stays inside
+    5-sigma noise + the Dobrushin/acceptance ceiling
+    (``stats.chain_bias_ceiling``) across mild→skewed weight profiles.
+    """
+    n = 64
+    lw = jnp.asarray(np.random.default_rng(profile_seed).normal(size=n)
+                     * scale, jnp.float32)
+    keys = [jax.random.key(i) for i in range(400)]
+    mean, expected, threshold = stats.resampling_mean_counts(
+        _chain_fn(scheme, lw, n, 32), keys, lw, n)
+    ceiling = stats.chain_bias_ceiling(lw, 32, n)
+    dev = np.abs(mean - expected)
+    worst = int(np.argmax(dev - threshold - ceiling))
+    assert np.all(dev <= threshold + ceiling), (
+        f"{scheme} biased at slot {worst}: |{mean[worst]:.3f} - "
+        f"{expected[worst]:.3f}| > {threshold[worst]:.3f} + {ceiling:.3f}")
+
+
+@pytest.mark.parametrize("scheme", sorted(resampling.COLLECTIVE_FREE))
+def test_counts_sum_with_traced_n_out(scheme):
+    """Masked-lane histogram: a traced ``n_out < capacity`` conserves
+    the offspring total (the RPA/shard-allocation contract)."""
+    lw = _random_lw(32, 5)
+    counts = jax.jit(lambda k, m: resampling.RESAMPLERS[scheme](
+        k, lw, m, capacity=64))(jax.random.key(0), 17)
+    assert int(counts.sum()) == 17
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis suite (skips without the dev extra)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+
+    @st.composite
+    def weight_vectors(draw):
+        n_in = draw(st.integers(1, 160))
+        lw = draw(st.lists(st.floats(-30, 5, allow_nan=False),
+                           min_size=n_in, max_size=n_in))
+        lw = jnp.asarray(lw, jnp.float32)
+        if n_in > 1:                       # kill a strict subset of slots
+            dead = draw(st.lists(st.integers(0, n_in - 1),
+                                 max_size=n_in - 1, unique=True))
+            alive = draw(st.integers(0, n_in - 1))
+            dead = [i for i in dead if i != alive]
+            if dead:
+                lw = lw.at[jnp.asarray(dead)].set(-jnp.inf)
+        return lw
+
+    @given(lw=weight_vectors(), n_out=st.integers(1, 300),
+           u=st.floats(0.0, 0.999999))
+    @settings(max_examples=25, deadline=None)
+    def test_systematic_kernel_matches_ref_prop(lw, n_out, u):
+        check_systematic_kernel_matches_ref(lw, u, n_out)
+
+    @given(lw=weight_vectors(), n_out=st.integers(1, 300),
+           iters=st.integers(1, 40), seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=25, deadline=None)
+    def test_collective_free_kernels_exact_prop(lw, n_out, iters, seed):
+        for scheme in resampling.COLLECTIVE_FREE:
+            check_collective_free_kernel_exact(scheme, lw, n_out, iters,
+                                               seed)
+
+else:
+
+    @pytest.mark.skip(
+        reason="property tests need the dev extra: pip install -e .[dev]")
+    def test_hypothesis_suite():
+        pass

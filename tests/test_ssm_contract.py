@@ -96,7 +96,18 @@ def test_resampling_unbiasedness(scheme):
     offspring counts equal N·w_i.  5-sigma CLT gate over 400 replicates
     (threshold derivation in ``stats.resampling_mean_counts``).  Lives
     here, not in the hypothesis suite: the gate must stay live without
-    the dev extra."""
+    the dev extra.
+
+    The comb schemes are exactly unbiased, so they face the bare CLT
+    threshold.  The collective-free chain schemes (Metropolis /
+    rejection) are only asymptotically unbiased in the chain budget:
+    the gate adds their derived finite-budget bias ceiling
+    (``stats.chain_bias_ceiling``; 2.359 on this weight profile at
+    budget 32, vs observed devs ≈ 0.78 Metropolis / 0.70 rejection) and
+    checks the ceiling is non-vacuous (< 5 % of n_out).  A truncated
+    budget must still FAIL this widened gate —
+    tests/test_resampling_prop.py::test_truncated_budget_fails_the_gate.
+    """
     n = 64
     lw = jnp.asarray(np.random.default_rng(0).normal(size=n) * 2.0,
                      jnp.float32)
@@ -105,6 +116,10 @@ def test_resampling_unbiasedness(scheme):
     keys = [jax.random.key(i) for i in range(400)]
     mean, expected, threshold = stats.resampling_mean_counts(
         fn, keys, lw, n)
+    if scheme in resampling.COLLECTIVE_FREE:
+        ceiling = stats.chain_bias_ceiling(lw, 32, n)
+        assert ceiling < 0.05 * n, f"vacuous chain gate: {ceiling}"
+        threshold = threshold + ceiling
     dev = np.abs(mean - expected)
     worst = int(np.argmax(dev - threshold))
     assert np.all(dev <= threshold), (

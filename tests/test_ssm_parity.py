@@ -55,3 +55,36 @@ def test_generic_step_matches_golden_bitwise(golden, resampler):
     np.testing.assert_array_equal(
         np.asarray(carry.ensemble.log_weights, np.float64),
         np.asarray(g["final_log_weights"]))
+
+
+def test_fused_backend_matches_golden_bitwise(golden):
+    """The fused weight phase (DESIGN.md §13) against the SAME golden the
+    composed path is pinned to — not fused-vs-composed in-process, but
+    fused-vs-committed-bytes.  This holds because the fused reference
+    path computes the estimate in the vmap-stable multiply+sum form and
+    shares the single max-shifted normalization with ESS / log_z
+    (§11.2, §13.1); any reassociation in the fused kernel breaks it
+    loudly.  Drift policy for paths where bitwise equality is NOT
+    promised is documented in DESIGN.md §13.3."""
+    cfg = golden["config"]
+    model = ssm.StochasticVolatilitySSM(
+        mu=cfg["mu"], phi=cfg["phi"], sigma=cfg["sigma"])
+    _, zs = ssm.simulate(jax.random.key(cfg["sim_seed"]), model,
+                         cfg["n_steps"])
+    carry, outs = run_sir(
+        jax.random.key(cfg["run_seed"]), model,
+        SIRConfig(n_particles=cfg["n_particles"], ess_frac=0.6,
+                  resampler="systematic", step_backend="fused"),
+        np.asarray(zs))
+    g = golden["systematic"]
+    np.testing.assert_array_equal(np.asarray(outs.estimate, np.float64),
+                                  np.asarray(g["estimates"]))
+    np.testing.assert_array_equal(np.asarray(outs.ess, np.float64),
+                                  np.asarray(g["ess"]))
+    np.testing.assert_array_equal(np.asarray(outs.log_marginal, np.float64),
+                                  np.asarray(g["log_marginal"]))
+    np.testing.assert_array_equal(np.asarray(outs.resampled).astype(int),
+                                  np.asarray(g["resampled"]))
+    np.testing.assert_array_equal(
+        np.asarray(carry.ensemble.log_weights, np.float64),
+        np.asarray(g["final_log_weights"]))
