@@ -16,10 +16,15 @@ def main() -> None:
     ap.add_argument("--dra", default="rna")
     ap.add_argument("--scheduler", default="lgs")
     ap.add_argument("--exchange-ratio", type=float, default=0.10)
+    ap.add_argument("--butterfly-cap", type=int, default=32,
+                    help="slab slots per butterfly mix stage")
     ap.add_argument("--particles", type=int, required=True)
     ap.add_argument("--frames", type=int, default=15)
     ap.add_argument("--img", type=int, default=256)
     ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--warmup", type=int, default=5,
+                    help="frames excluded from the tracking-rmse report "
+                         "(short scaling runs pass a small value)")
     ap.add_argument("--domain", action="store_true",
                     help="input-space domain decomposition (DESIGN.md §10): "
                          "tile-sharded halo slabs instead of replicated "
@@ -45,7 +50,8 @@ def main() -> None:
     movie = generate_movie(jax.random.key(0), cfg, n_frames=args.frames)
     mesh = make_host_mesh(args.devices)
     dra = DRAConfig(kind=args.dra, scheduler=args.scheduler,
-                    exchange_ratio=args.exchange_ratio)
+                    exchange_ratio=args.exchange_ratio,
+                    butterfly_cap=args.butterfly_cap)
     spec = None
     if args.domain:
         spec = make_domain_spec(cfg, args.devices,
@@ -66,17 +72,25 @@ def main() -> None:
         res = once()
     dt = (time.time() - t0) / args.repeats
 
-    rmse = float(tracking_rmse(res.estimates, movie.trajectories[:, 0]))
+    import numpy as np
+    rmse = float(tracking_rmse(res.estimates, movie.trajectories[:, 0],
+                               warmup=min(args.warmup, args.frames - 1)))
     out = {
         "devices": args.devices, "dra": args.dra,
         "scheduler": args.scheduler,
         "exchange_ratio": args.exchange_ratio,
         "particles": args.particles, "frames": args.frames,
         "seconds": dt, "rmse": rmse, "domain": bool(args.domain),
+        "ess_min": float(np.asarray(res.ess).min()),
         "obs_bytes_per_shard": args.img * args.img * 4,
     }
+    # comm-volume accounting (DESIGN.md §14.3): static per frame, so one
+    # sample carries the whole run; absent on the single-device path
+    if "comm_bytes" in res.diag:
+        out["bytes_per_frame"] = int(np.asarray(res.diag["comm_bytes"])[0])
+        out["collective_stages"] = int(
+            np.asarray(res.diag["comm_stages"])[0])
     if spec is not None:
-        import numpy as np
         out.update({
             "grid": list(spec.grid),
             "obs_bytes_per_shard": spec.slab_bytes(),

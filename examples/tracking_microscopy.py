@@ -3,7 +3,8 @@ filtering of fluorescence-microscopy movies on a device mesh.
 
 Reproduces the experimental pipeline at container scale:
   synthetic 512×512 movie (Fig 4) → distributed SIR with a selectable DRA
-  (RNA / ARNA / RPA × GS/SGS/LGS) → trajectory + RMSE + DLB diagnostics.
+  (RNA / ARNA / RPA × GS/SGS/LGS, or the DESIGN.md §14 butterfly) →
+  trajectory + RMSE + DLB / comm-volume diagnostics.
 
     PYTHONPATH=src python examples/tracking_microscopy.py \
         --devices 8 --dra rpa --scheduler lgs --particles 262144
@@ -19,7 +20,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--dra", default="arna",
-                    choices=["mpf", "rna", "arna", "rpa"])
+                    choices=["mpf", "rna", "arna", "rpa", "butterfly"])
     ap.add_argument("--scheduler", default="lgs",
                     choices=["gs", "sgs", "lgs"])
     ap.add_argument("--exchange-ratio", type=float, default=0.10)
@@ -65,6 +66,12 @@ def main() -> None:
     print(f"wall-clock {dt:.2f}s  ({dt / args.frames * 1e3:.1f} ms/frame)")
     print(f"RMSE = {rmse:.4f} px   (paper §VII.E: ~0.063 px)")
     print(f"mean ESS = {float(res.ess.mean()):,.0f}")
+    if "comm_bytes" in res.diag:
+        import numpy as np
+        print(f"comm volume (DESIGN.md §14.3): "
+              f"{int(np.asarray(res.diag['comm_bytes']).ravel()[0]):,} B/frame "
+              f"per shard, "
+              f"{int(np.asarray(res.diag['comm_stages']).ravel()[0])} collective stages")
     if args.dra == "rpa":
         import numpy as np
         print(f"DLB links/frame (max) = {int(np.asarray(res.diag['links']).max())}, "

@@ -1,6 +1,7 @@
 """Distributed resampling algorithms (paper §III) as SPMD shard programs.
 
-Four DRA families, exactly the paper's taxonomy:
+Five DRA families — the paper's taxonomy plus the butterfly topology of
+Heine–Whiteley–Cemgil (arXiv:1812.01502):
 
 * **MPF**  — bank of independent PFs; zero particle communication; global
   estimate combined from per-shard aggregate weights (one tiny psum).
@@ -15,15 +16,27 @@ Four DRA families, exactly the paper's taxonomy:
 * **RPA**  — stratified resampling with proportional allocation across
   shards, followed by DLB routing (GS/SGS/LGS from ``repro.core.dlb``) of
   compressed particles.
+* **BUTTERFLY** — log2(P) distance-doubling pairwise mix stages
+  (``runtime.butterfly_schedule``); each stage ships one
+  ``butterfly_cap``-slot slab of compressed (state, count, log-weight)
+  triples to the stage partner via ``ppermute`` — O(log P) collective
+  rounds and a statically bounded comm volume per step (DESIGN.md §14).
 
 All functions here are *per-shard* ensemble transformers: they take the
 shard's ``ParticleEnsemble`` and return the resampled one (DESIGN.md §9),
 use collectives with an ``axis_name`` (always through the
 ``repro.core.runtime`` facade), and are meant to be called inside
 ``shard_map`` (see ``repro.core.filters`` for the user-facing driver).
-RPA stays in the compressed (counts) representation end-to-end: local
-resample → DLB routing → merge all move multiplicities and per-replica
-log-weights, and replicas are only materialized afterwards (paper §V.B).
+RPA and butterfly stay in the compressed (counts) representation
+end-to-end: local resample → routing → merge all move multiplicities and
+per-replica log-weights, and replicas are only materialized afterwards
+(paper §V.B).
+
+Every DRA also returns **comm-volume accounting** in its diagnostics
+(DESIGN.md §14.3): ``comm_bytes`` — the payload bytes this shard injects
+into collectives per frame (logical message size, not algorithm wire
+traffic) — and ``comm_stages`` — sequential collective rounds on the
+critical path.  Shapes are static, so both are trace-time constants.
 """
 from __future__ import annotations
 
@@ -49,7 +62,7 @@ RESAMPLE_BACKENDS = ("auto", "pallas", "jnp")
 class DRAConfig:
     """Distributed-resampling configuration (paper §III–§V knobs)."""
 
-    kind: str = "rna"               # mpf | rna | arna | rpa
+    kind: str = "rna"               # mpf | rna | arna | rpa | butterfly
     resampler: str = "systematic"
     ess_frac: float = 0.5            # N_threshold = ess_frac * N (Alg. 1)
     # local-resampling backend: "pallas" = fused CDF+bisection kernel
@@ -65,22 +78,25 @@ class DRAConfig:
     scheduler: str = "lgs"           # gs | sgs | lgs
     k_cap: int = 64                  # routing window (unique particles/dest)
     slack: float = 2.0               # per-shard allocation cap = slack * C
+    # BUTTERFLY: slab slots shipped to the stage partner per mix stage.
+    # Compression makes the slot budget go far (a slot carries an arbitrary
+    # multiplicity); units that do not fit stay local with exact weights
+    # (DESIGN.md §14.2), so this bounds comm volume, not correctness.
+    butterfly_cap: int = 32
 
     def __post_init__(self):
-        assert self.kind in ("mpf", "rna", "arna", "rpa"), self.kind
+        assert self.kind in ("mpf", "rna", "arna", "rpa", "butterfly"), \
+            self.kind
         assert self.scheduler in dlb.SCHEDULERS, self.scheduler
         assert self.resampler in resampling.RESAMPLERS, self.resampler
         assert self.resample_backend in RESAMPLE_BACKENDS, self.resample_backend
+        assert self.butterfly_cap >= 1, self.butterfly_cap
         # an explicit kernel request must not silently fall back: only the
         # systematic scheme has a kernel
         if self.resample_backend == "pallas":
             assert self.resampler == "systematic", (
                 f"resample_backend='pallas' requires resampler='systematic', "
                 f"got {self.resampler!r}")
-
-
-def _axis_size(axis_name: str) -> int:
-    return runtime.axis_size(axis_name)
 
 
 def use_pallas_resample(cfg: DRAConfig, n_out) -> bool:
@@ -99,6 +115,25 @@ def use_pallas_resample(cfg: DRAConfig, n_out) -> bool:
     if cfg.resample_backend == "pallas":
         return True
     return jax.default_backend() == "tpu"       # auto
+
+
+def _per_particle_bytes(state: Any) -> int:
+    """Payload bytes of one particle's state (static under tracing)."""
+    return runtime.tree_bytes(
+        jax.tree_util.tree_map(lambda x: x[:1], state))
+
+
+def _comm_diag(bytes_per_frame: int, stages: int) -> dict:
+    """Comm-volume accounting entries for a DRA diag dict (DESIGN.md §14.3).
+
+    ``bytes_per_frame`` — payload bytes this shard injects into collectives
+    during the resample phase of one frame (logical message size; int32 is
+    ample for any per-shard configuration this library runs).
+    ``stages`` — sequential collective rounds on the critical path
+    (leaf-parallel launches of one logical exchange count once).
+    """
+    return {"comm_bytes": jnp.asarray(bytes_per_frame, jnp.int32),
+            "comm_stages": jnp.asarray(stages, jnp.int32)}
 
 
 def _shard_log_z(log_weights: Array, axis_name: str) -> tuple[Array, Array]:
@@ -184,7 +219,7 @@ def _local_resample_ensemble(key: Array, ensemble: ParticleEnsemble,
 
 
 # ---------------------------------------------------------------------------
-# The four DRA resample+rebalance programs
+# The five DRA resample+rebalance programs
 # ---------------------------------------------------------------------------
 
 def mpf_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
@@ -198,7 +233,9 @@ def mpf_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
     # each offspring carries Ŵ_i / C of the global posterior mass
     out = _local_resample_ensemble(key, ensemble,
                                    local_lz - glz - jnp.log(c), cfg)
-    return out, {"exchanged": jnp.zeros((), jnp.int32)}
+    return out, {"exchanged": jnp.zeros((), jnp.int32),
+                 # one scalar all_gather of the shard logZ
+                 **_comm_diag(4, 1)}
 
 
 def _ring_exchange(state: Any, log_weights: Array, m_buf: int, m_valid: Array,
@@ -209,7 +246,7 @@ def _ring_exchange(state: Any, log_weights: Array, m_buf: int, m_valid: Array,
     If ``shuffle`` is true (ARNA lost-mode), use a fused all_to_all perfect
     shuffle instead of the ring (maximal information mixing).
     """
-    p = _axis_size(axis_name)
+    p = runtime.axis_size(axis_name)
     perm = [(i, (i + 1) % p) for i in range(p)]
 
     def take(x):
@@ -280,7 +317,10 @@ def rna_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
     state, lw = _ring_exchange(ens.state, ens.log_weights, m,
                                jnp.asarray(m), axis_name)
     ens = ens.replace(state=state, log_weights=lw)
-    return ens, {"exchanged": jnp.asarray(m, jnp.int32)}
+    return ens, {"exchanged": jnp.asarray(m, jnp.int32),
+                 # logZ gather + ring ppermute of m (state, log-weight) rows
+                 **_comm_diag(4 + m * (_per_particle_bytes(ens.state) + 4),
+                              2)}
 
 
 def arna_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
@@ -288,7 +328,7 @@ def arna_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
                   max_log_lik: Array) -> tuple[ParticleEnsemble, dict]:
     """ARNA: RNA with P_eff-adaptive exchange ratio and lost-mode shuffle."""
     c = ensemble.capacity
-    p = _axis_size(axis_name)
+    p = runtime.axis_size(axis_name)
     eff_lw = particles.effective_log_weights(ensemble.log_weights,
                                              ensemble.counts)
     p_eff = effective_processes(eff_lw, axis_name)
@@ -316,6 +356,9 @@ def arna_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
         "p_eff": p_eff,
         "q": q,
         "lost": lost.astype(jnp.int32),
+        # P_eff gather + logZ gather + lost-mode pmax + exchange of the
+        # full m_buf buffer (ring and shuffle ship the same slab)
+        **_comm_diag(12 + m_buf * (_per_particle_bytes(ens.state) + 4), 4),
     }
 
 
@@ -330,7 +373,7 @@ def rpa_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
     no placeholder weight vectors anywhere (DESIGN.md §9).
     """
     c = ensemble.capacity
-    p = _axis_size(axis_name)
+    p = runtime.axis_size(axis_name)
     my = runtime.axis_index(axis_name)
     n_total = c * p
     cap_units = int(round(cfg.slack * c))
@@ -364,4 +407,109 @@ def rpa_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
         "links": stats["links"],
         "units_moved": stats["units_moved"],
         "max_message_units": stats["max_message_units"],
+        # logZ gather + fused all_to_all of P×K (state, count, log-weight)
+        # window triples
+        **_comm_diag(
+            4 + p * cfg.k_cap * (_per_particle_bytes(ensemble.state) + 8),
+            2),
     }
+
+
+def butterfly_resample(key: Array, ensemble: ParticleEnsemble, cfg: DRAConfig,
+                       axis_name: str) -> tuple[ParticleEnsemble, dict]:
+    """Butterfly DRA: log2(P) pairwise mix stages with exact bookkeeping
+    (Heine–Whiteley–Cemgil, arXiv:1812.01502; DESIGN.md §14).
+
+    Stage ``s`` pairs shard ``i`` with ``i XOR 2^s``
+    (``runtime.butterfly_schedule``).  Within a pair holding aggregate
+    weights (W_i, W_j), each shard draws
+
+        n_i = (C − m_i←j) + m_i→j   offspring from its local ensemble,
+
+    where ``m_i→j = min(round(C · W_i/(W_i+W_j)), butterfly_cap)`` is the
+    number of offspring *units* the partner takes from shard ``i``'s
+    distribution (both shards compute identical splits from one scalar
+    log-total exchange, because logaddexp is symmetric).  Capping the
+    units at the slab's slot budget makes the exchange structurally
+    overflow-free — a window of m units on the cumulative unit line
+    overlaps at most m ≤ cap slots (``dlb.pack_slab``) — and conserves
+    the per-shard unit count *exactly*: every stage ends with C logical
+    units on every shard, so the final materialize never truncates.
+
+    Every unit shard ``i`` draws — kept or shipped — carries per-unit
+    weight ``W_i / n_i`` (uniform within the draw), so the pair's total
+    bookkeeping weight is conserved exactly for any kept/shipped split
+    and the estimates stay unbiased under the cap (DESIGN.md §14.2).
+    The capped totals no longer equalize exactly across shards, so the
+    global normalizer is carried by a parallel *scalar* butterfly — the
+    hypercube all-reduce average ``lz_run ← logaddexp(lz_run, partner) −
+    log 2`` rides the same ppermute and ends as ``log(W_global / P)`` on
+    every shard — no all_gather anywhere in this DRA.  Capacity grows by
+    ``butterfly_cap`` slots per stage; one materialize restores C slots.
+    """
+    c = ensemble.capacity
+    p = runtime.axis_size(axis_name)
+    schedule = runtime.butterfly_schedule(p)
+    cap = cfg.butterfly_cap
+    zero = jnp.zeros((), jnp.int32)
+    pp_bytes = _per_particle_bytes(ensemble.state)
+    # per stage: one ppermute of the two scalars (lz, lz_run) + one slab
+    # ppermute of (state, count, log-weight) triples → 2 rounds,
+    # 8 + cap·(pp+8) bytes
+    comm = _comm_diag(len(schedule) * (8 + cap * (pp_bytes + 8)),
+                      2 * len(schedule))
+
+    if not schedule:                 # P == 1: plain local resample
+        out = _local_resample_ensemble(key, ensemble, -jnp.log(float(c)), cfg)
+        return out, {"exchanged": zero, "overflow": zero,
+                     "truncated": zero, **comm}
+
+    ens = ensemble
+    keys = jax.random.split(key, len(schedule))
+    lz_run = particles.log_sum_weights(ens.log_weights, ens.counts)
+    shipped_total = zero
+    overflow_total = zero
+    for k_s, perm in zip(keys, schedule):
+        eff = particles.effective_log_weights(ens.log_weights, ens.counts)
+        lz = jax.scipy.special.logsumexp(eff)
+        lz_p, lzr_p = runtime.grouped_ppermute((lz, lz_run), axis_name, perm)
+        lz_run = jnp.logaddexp(lz_run, lzr_p) - jnp.log(2.0)
+        pair = jnp.logaddexp(lz, lz_p)
+        # dead-pair guard: both totals -inf → no units move either way
+        frac_own = jnp.where(jnp.isfinite(pair), jnp.exp(lz - pair), 0.0)
+        frac_partner = jnp.where(jnp.isfinite(pair), jnp.exp(lz_p - pair), 0.0)
+        m_send = jnp.minimum(jnp.round(c * frac_own), cap).astype(jnp.int32)
+        m_recv = jnp.minimum(jnp.round(c * frac_partner), cap).astype(jnp.int32)
+        n_tot = c - m_recv + m_send
+        # every unit of this draw carries W_i / n_i — exact for any split
+        fill = lz - jnp.log(jnp.maximum(n_tot, 1).astype(jnp.float32))
+        # comb teeth must cover n_tot ≤ C + cap (a comb only emits
+        # `capacity` points, so an undersized one would silently truncate
+        # the draw whenever this shard sends more than it receives)
+        comp = particles.resample_compressed(
+            k_s, ens, n_tot, scheme=cfg.resampler,
+            capacity=ens.capacity + cap, fill_log_weight=fill)
+        pack = dlb.pack_slab(comp, m_send, k_cap=cap)
+        recv_state, recv_counts, recv_lw = runtime.grouped_ppermute(
+            (pack.slab_state, pack.slab_counts, pack.slab_log_weights),
+            axis_name, perm)
+
+        def cat(a, b):
+            return jnp.concatenate([a, b], axis=0)
+
+        ens = ParticleEnsemble(
+            state=jax.tree_util.tree_map(cat, comp.state, recv_state),
+            log_weights=cat(comp.log_weights, recv_lw),
+            counts=cat(pack.kept_counts, recv_counts))
+        shipped_total = shipped_total + pack.shipped_units
+        overflow_total = overflow_total + pack.overflow_units
+
+    # scalar butterfly == hypercube all-reduce: lz_run is log(W_global/P)
+    glz = lz_run + jnp.log(float(p))
+    truncated = jnp.maximum(particles.logical_size(ens) - c, 0)
+    out = particles.materialize(
+        ens.replace(log_weights=ens.log_weights - glz), c)
+    return out, {"exchanged": shipped_total,
+                 "overflow": runtime.psum(overflow_total, axis_name),
+                 "truncated": runtime.psum(truncated, axis_name),
+                 **comm}

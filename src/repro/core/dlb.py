@@ -181,6 +181,57 @@ def _window_overlap(u_lo: Array, u_hi: Array, a: Array, b: Array) -> Array:
     return jnp.maximum(jnp.minimum(u_hi, b) - jnp.maximum(u_lo, a), 0)
 
 
+class SlabPack(NamedTuple):
+    """One shard's outbound slab for a SINGLE destination (butterfly
+    stages route to exactly one partner, so the (P, K) window matrix of
+    :class:`PackResult` collapses to one (K, ...) slab)."""
+
+    kept_counts: Array          # (C,)     multiplicities staying local
+    slab_state: Any             # (K, ...) outbound unique particles
+    slab_counts: Array          # (K,)     outbound multiplicities
+    slab_log_weights: Array     # (K,)     outbound per-replica log-weights
+    shipped_units: Array        # ()       units actually packed
+    overflow_units: Array       # ()       units that did not fit in K slots
+
+
+def pack_slab(ensemble: ParticleEnsemble, m_units: Array, *,
+              k_cap: int) -> SlabPack:
+    """Pack the LAST ``m_units`` units of the compressed ensemble's unit
+    line into one ``k_cap``-slot slab (pure, no collectives).
+
+    Same interval machinery as :func:`pack_windows` specialised to one
+    destination: particle ``k`` owns ``[u_lo_k, u_hi_k)`` on the
+    cumulative unit line and the slab window is the suffix
+    ``[total - m, total)``.  Unlike the consecutive-slot windows of
+    :func:`pack_windows`, the slab gathers exactly the slots with a
+    *positive* overlap (static-size ``nonzero``): a window of ``u``
+    units overlaps at most ``u`` such slots (each contributes ≥ 1 unit),
+    so ``m_units <= k_cap`` guarantees zero overflow even when count-0
+    slots are interleaved through the unit line.  Units that do not fit
+    stay local in ``kept_counts`` (conservation holds exactly, mirroring
+    the window-residency rule of :func:`pack_windows`).
+    """
+    counts = ensemble.counts.astype(jnp.int32)
+    c = counts.shape[0]
+    u_hi = jnp.cumsum(counts)
+    u_lo = u_hi - counts
+    total = u_hi[-1]
+    m = jnp.clip(jnp.asarray(m_units, jnp.int32), 0, total)
+    a = total - m                                  # window = [a, total)
+    sent_all = _window_overlap(u_lo, u_hi, a, total).astype(jnp.int32)
+    (idx,) = jnp.nonzero(sent_all, size=k_cap, fill_value=c - 1)
+    valid = jnp.arange(k_cap) < jnp.sum(sent_all > 0)
+    sent = jnp.where(valid, sent_all[idx], 0)
+    shipped = jnp.sum(sent)
+    slab_state = jax.tree_util.tree_map(lambda x: x[idx], ensemble.state)
+    slab_lw = jnp.where(sent > 0, ensemble.log_weights[idx], -jnp.inf)
+    kept = counts.at[idx].add(-sent)
+    return SlabPack(kept_counts=kept, slab_state=slab_state,
+                    slab_counts=sent, slab_log_weights=slab_lw,
+                    shipped_units=shipped,
+                    overflow_units=m - shipped)
+
+
 def pack_windows(ensemble: ParticleEnsemble, row_send: Array, *,
                  k_cap: int) -> PackResult:
     """Pack one shard's outbound destination windows (pure, no

@@ -26,6 +26,7 @@ __all__ = [
     "shard_map", "make_mesh", "host_mesh",
     "psum", "pmean", "pmax", "pmin", "psum_scatter",
     "all_gather", "ppermute", "all_to_all", "axis_index", "axis_size",
+    "butterfly_schedule", "grouped_ppermute", "tree_bytes",
     "simulate_host_devices", "respawn_with_host_devices",
     "host_device_env", "HOST_DEVICE_FLAG",
 ]
@@ -86,6 +87,60 @@ def axis_size(axis_name: str) -> int:
     if fn is not None:
         return fn(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Stage schedules for multi-stage collectives (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def butterfly_schedule(p: int) -> list[list[tuple[int, int]]]:
+    """Distance-doubling pairwise partner schedule over ``p`` shards.
+
+    Stage ``s`` pairs shard ``i`` with ``i XOR 2**s`` — the classic
+    hypercube/butterfly topology (Heine–Whiteley–Cemgil,
+    arXiv:1812.01502).  Each stage is a valid ``ppermute`` permutation
+    (XOR with a constant is an involution, hence a bijection), every
+    shard talks to exactly one partner per stage, and after all
+    ``log2(p)`` stages every pair of shards is connected by exactly one
+    path.  Returns a list of ``log2(p)`` permutations, each a list of
+    ``(src, dst)`` pairs ready for :func:`ppermute`.
+    """
+    if p < 1 or (p & (p - 1)):
+        raise ValueError(f"butterfly topology needs a power-of-two shard "
+                         f"count, got {p}")
+    return [[(i, i ^ (1 << s)) for i in range(p)]
+            for s in range(p.bit_length() - 1)]
+
+
+def grouped_ppermute(tree: Any, axis_name: str,
+                     perm: Sequence[tuple[int, int]]) -> Any:
+    """``ppermute`` every leaf of a pytree along one permutation.
+
+    One collective launch per leaf; used by the butterfly DRA to ship
+    its (state, count, log-weight) slab triples to the stage partner in
+    a single logical exchange.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: ppermute(x, axis_name, perm), tree)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Static payload size of a pytree in bytes (shapes are always
+    static under SPMD tracing, so this is a plain Python int even for
+    tracer leaves) — the unit of the comm-volume accounting
+    (DESIGN.md §14.3)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(x.shape) * jnp_dtype_size(x.dtype)
+                   for x in leaves))
+
+
+def jnp_dtype_size(dtype) -> int:
+    """Itemsize of a JAX/NumPy dtype (PRNG key dtypes report their
+    underlying data layout)."""
+    try:
+        return np.dtype(dtype).itemsize
+    except TypeError:        # extended dtypes (e.g. PRNG keys)
+        return int(dtype.itemsize)
 
 
 # ---------------------------------------------------------------------------

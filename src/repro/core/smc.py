@@ -344,8 +344,18 @@ def make_distributed_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig,
                                              max_ll)
         elif dra.kind == "rpa":
             r_ens, diag = dist.rpa_resample(k_res, ens, dra, axis_name)
+        elif dra.kind == "butterfly":
+            r_ens, diag = dist.butterfly_resample(k_res, ens, dra, axis_name)
         else:
             raise ValueError(dra.kind)
+
+        # fold the weight-phase collectives into the DRA's comm accounting
+        # (DESIGN.md §14.3): logZ gather + ESS gather/psum + estimate psum.
+        # Domain-migration traffic is reported separately in mig_diag.
+        step_bytes = 12 + runtime.tree_bytes(estimate)
+        diag = {**diag,
+                "comm_bytes": diag["comm_bytes"] + step_bytes,
+                "comm_stages": diag["comm_stages"] + 4}
 
         # select keeps SPMD collective schedule static (DESIGN.md §2.3)
         kept = ens.replace(log_weights=lw - glz)

@@ -1,0 +1,50 @@
+"""Emulated SPMD mesh for tier-1 collective tests.
+
+``jax.vmap`` with an ``axis_name`` gives every collective in
+``repro.core.runtime`` (psum / ppermute / all_to_all / all_gather) its
+full SPMD semantics on a single device — including inside
+``jax.lax.scan`` — so the distributed resampling algorithms can be
+statistically gated in the fast CI lane without a multi-device mesh.
+The slow lane re-runs the same programs on real simulated host devices
+via ``tests/workers/distributed_checks.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import filters, smc
+
+AXIS = "data"
+
+
+def emulated(per_shard, p: int):
+    """Run ``per_shard(shard_index)`` across an emulated ``p``-way mesh.
+
+    Returns the jitted vmapped callable; outputs gain a leading axis of
+    size ``p`` (collective results are replicated along it).
+    """
+    return lambda: jax.jit(
+        jax.vmap(per_shard, axis_name=AXIS))(jnp.arange(p))
+
+
+def run_filter(model, sir, dra, key, observations, p: int):
+    """Distributed SIR over ``observations`` on an emulated ``p``-shard mesh.
+
+    Mirrors ``ParallelParticleFilter._run_sharded`` (same
+    ``make_distributed_sir_step`` + ``_shard_carry`` + ``scan`` program)
+    but swaps shard_map for the vmap emulation.  Returns ``(outs, final)``
+    where ``outs`` is the stacked ``StepOutput`` with a leading shard axis
+    and ``final`` is the per-shard final ensemble.
+    """
+    step = smc.make_distributed_sir_step(model, sir, dra, AXIS)
+    obs = jnp.asarray(observations)
+    n = sir.n_particles
+
+    def per_shard(i):
+        del i  # shard identity comes from the axis index inside the vmap
+        carry = filters._shard_carry(key, model, AXIS, n // p, n)
+        carry, outs = jax.lax.scan(step, carry, obs)
+        return outs, carry.ensemble
+
+    return emulated(per_shard, p)()

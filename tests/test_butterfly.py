@@ -1,0 +1,259 @@
+"""Butterfly DRA verification (DESIGN.md §14).
+
+Four layers, mirroring the paper-gate structure used for the other four
+DRA families:
+
+1. deterministic structure — stage schedule and slab-packing exactness
+   (the §14.2 zero-overflow / count-conservation lemmas, checked
+   directly);
+2. the resampler's defining 5-sigma unbiasedness gate on ancestor-tagged
+   *global* offspring counts across the full log2(P) mix cascade;
+3. Kalman-oracle end-to-end gates on the emulated 8-shard mesh (tier-1
+   at N = 4096, ``-m slow`` at N = 1e5);
+4. the §14.3 comm-volume accounting contract, including the headline
+   bounded-slab vs all-to-all byte reduction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed as dist
+from repro.core import dlb, particles, runtime
+from repro.core.particles import ParticleEnsemble
+from repro.core.smc import SIRConfig
+from repro.models import ssm
+
+import emesh
+import stats
+import test_ssm_oracle as oracle_cfg
+
+P = 8
+
+
+# ---------------------------------------------------------------------------
+# 1. stage schedule + slab packing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [1, 2, 4, 8, 16])
+def test_butterfly_schedule_structure(p):
+    sched = runtime.butterfly_schedule(p)
+    assert len(sched) == p.bit_length() - 1
+    reach = {i: {i} for i in range(p)}
+    for s, perm in enumerate(sched):
+        assert sorted(src for src, _ in perm) == list(range(p))
+        assert sorted(d for _, d in perm) == list(range(p))
+        for src, d in perm:
+            assert d == src ^ (1 << s)      # distance-doubling partner
+            assert (d, src) in perm         # involution: pairwise exchange
+        for src, d in perm:
+            reach[src] = reach[src] | reach[d]
+    # after all stages every shard has (transitively) mixed with every other
+    assert all(r == set(range(p)) for r in reach.values())
+
+
+@pytest.mark.parametrize("p", [3, 6, 12])
+def test_butterfly_schedule_rejects_non_pow2(p):
+    with pytest.raises(ValueError):
+        runtime.butterfly_schedule(p)
+
+
+def _tagged_ensemble(counts, log_weights):
+    counts = jnp.asarray(counts, jnp.int32)
+    c = counts.shape[0]
+    return ParticleEnsemble(state=jnp.arange(c, dtype=jnp.float32),
+                            log_weights=jnp.asarray(log_weights, jnp.float32),
+                            counts=counts)
+
+
+def test_pack_slab_exact_when_capped():
+    counts = [3, 0, 2, 0, 1, 4]
+    lw = np.log(np.arange(1, 7, dtype=np.float64))
+    ens = _tagged_ensemble(counts, lw)
+    total = sum(counts)
+    for m in range(total + 1):
+        pack = dlb.pack_slab(ens, m, k_cap=4)
+        # §14.2: a window of m units has positive overlap with ≤ m slots and
+        # count-0 slots are excluded, so k_cap ≥ min(m, #nonempty) ⇒ exact
+        assert int(pack.overflow_units) == 0, m
+        assert int(pack.shipped_units) == m
+        sent = np.zeros(len(counts), np.int64)
+        idx = np.asarray(
+            jax.tree_util.tree_leaves(pack.slab_state)[0], np.int64)
+        np.add.at(sent, idx, np.asarray(pack.slab_counts))
+        np.testing.assert_array_equal(
+            np.asarray(pack.kept_counts) + sent, counts)
+        # shipped units keep their source slot's weight and state tag
+        sc = np.asarray(pack.slab_counts)
+        np.testing.assert_allclose(np.asarray(pack.slab_log_weights)[sc > 0],
+                                   lw[idx[sc > 0]], rtol=1e-6)
+
+
+def test_pack_slab_overflow_accounting():
+    ens = _tagged_ensemble([2, 2, 2], np.zeros(3))
+    pack = dlb.pack_slab(ens, 5, k_cap=1)     # window spans 3 slots, 1 fits
+    shipped, overflow = int(pack.shipped_units), int(pack.overflow_units)
+    assert shipped + overflow == 5 and overflow > 0
+    # overflowed units are NOT lost — they stay in kept_counts
+    assert int(np.asarray(pack.kept_counts).sum()) + shipped == 6
+
+
+# ---------------------------------------------------------------------------
+# 2. 5-sigma global offspring-count gate across the mix cascade
+# ---------------------------------------------------------------------------
+
+def test_butterfly_global_counts_unbiased():
+    """Ancestor-tagged global offspring counts across all log2(P) stages
+    match ``n_out · w`` under the existing 5-sigma gate.
+
+    Each mix stage is one conditionally-unbiased systematic draw, so the
+    global count of any tag is a martingale in the stage index and its
+    variance is at most the sum of the per-stage ceilings — hence the
+    single-draw threshold of ``stats.resampling_mean_counts`` widened by
+    ``sqrt(n_stages)``.  ``butterfly_cap = C`` keeps the proportional
+    pair splits un-truncated (rounding alone perturbs the expectation by
+    O(stages/C) ≪ the gate width).
+    """
+    c, reps = 64, 192
+    n_tags = P * c
+    rng = np.random.default_rng(7)
+    lw_np = rng.normal(0.0, 0.7, size=(P, c)).astype(np.float32)
+    lw = jnp.asarray(lw_np)
+    tags = jnp.arange(n_tags, dtype=jnp.float32).reshape(P, c)
+    cfg = dist.DRAConfig(kind="butterfly", butterfly_cap=c)
+
+    @jax.jit
+    def run(key):
+        def shard(i):
+            ens = ParticleEnsemble(state=tags[i], log_weights=lw[i],
+                                   counts=jnp.ones((c,), jnp.int32))
+            return dist.butterfly_resample(key, ens, cfg, emesh.AXIS)
+        return jax.vmap(shard, axis_name=emesh.AXIS)(jnp.arange(P))
+
+    keys_ref = jax.random.split(jax.random.key(3), reps)
+
+    def counts_fn(key):
+        out, diag = run(key)
+        assert int(np.asarray(diag["overflow"])[0]) == 0
+        assert int(np.asarray(diag["truncated"])[0]) == 0
+        hist = np.zeros(n_tags, np.int64)
+        tag = np.asarray(out.state).round().astype(np.int64).ravel()
+        cnt = np.asarray(out.counts, np.int64).ravel()
+        np.add.at(hist, tag, cnt)
+        return hist
+
+    mean, expected, thr = stats.resampling_mean_counts(
+        counts_fn, list(keys_ref), lw_np.ravel(), n_tags)
+    n_stages = len(runtime.butterfly_schedule(P))
+    thr = thr * np.sqrt(n_stages)
+    worst = np.max(np.abs(mean - expected) / thr)
+    assert worst < 1.0, f"count gate violated: {worst:.2f}x threshold"
+    # per-shard unit totals are exact every replicate (no truncation)
+    assert int(counts_fn(keys_ref[0]).sum()) == n_tags
+
+
+# ---------------------------------------------------------------------------
+# 3. Kalman-oracle gates on the emulated 8-shard mesh
+# ---------------------------------------------------------------------------
+
+def _run_butterfly_oracle(name: str, n_particles: int):
+    model = ssm.oracle_configs()[name]
+    k_sim, k_run = jax.random.split(jax.random.key(oracle_cfg.SEEDS[name]))
+    _, zs = ssm.simulate(k_sim, model, oracle_cfg.N_STEPS)
+    oracle = ssm.kalman_filter(model, np.asarray(zs))
+    sir = SIRConfig(n_particles=n_particles)
+    dra = dist.DRAConfig(kind="butterfly")
+    outs, final = emesh.run_filter(model, sir, dra, k_run, zs, P)
+
+    mean_slack, lz_slack = oracle_cfg.SLACKS[name]
+    est = np.asarray(outs.estimate)[0]
+    bound = stats.pf_mean_bound(oracle.covs, n_particles, slack=mean_slack)
+    spread = float(np.sqrt(np.trace(
+        oracle.covs, axis1=-2, axis2=-1).mean()))
+    assert bound < spread, "vacuous gate; raise N"
+    err = stats.rmse(est, oracle.means)
+    assert err < bound, f"{name}: rmse {err:.4f} over bound {bound:.4f}"
+
+    lm = float(np.asarray(outs.log_marginal, np.float64)[0].sum())
+    lz_err = abs(lm - float(oracle.log_marginals.sum()))
+    lz_bound = stats.log_marginal_bound(oracle_cfg.N_STEPS, n_particles,
+                                        slack=lz_slack)
+    assert lz_err < lz_bound, f"{name}: lz {lz_err:.3f} > {lz_bound:.3f}"
+
+    stats.ess_sane(np.asarray(outs.ess)[0], n_particles)
+    # the §14.2 exactness lemmas, end-to-end: nothing dropped, ever
+    assert int(np.asarray(outs.diag["overflow"]).sum()) == 0
+    assert int(np.asarray(outs.diag["truncated"]).sum()) == 0
+    total = int(np.asarray(
+        jax.vmap(particles.logical_size)(final)).sum())
+    assert total == n_particles
+
+
+@pytest.mark.parametrize("name", ["ar1", "cv2d"])
+def test_butterfly_oracle(name):
+    _run_butterfly_oracle(name, 4096)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(oracle_cfg.SEEDS))
+def test_butterfly_oracle_large(name):
+    _run_butterfly_oracle(name, 100_000)
+
+
+def test_butterfly_p1_falls_back_to_local():
+    model = ssm.oracle_configs()["ar1"]
+    k_sim, k_run = jax.random.split(jax.random.key(0))
+    _, zs = ssm.simulate(k_sim, model, 8)
+    outs, _ = emesh.run_filter(model, SIRConfig(n_particles=256),
+                               dist.DRAConfig(kind="butterfly"), k_run, zs, 1)
+    assert np.all(np.isfinite(np.asarray(outs.estimate)))
+    # empty schedule: zero DRA traffic, only the step-level reductions
+    assert int(np.asarray(outs.diag["comm_bytes"])[0, 0]) == \
+        12 + _estimate_bytes(outs)
+    assert int(np.asarray(outs.diag["comm_stages"])[0, 0]) == 4
+
+
+# ---------------------------------------------------------------------------
+# 4. comm-volume accounting contract (§14.3)
+# ---------------------------------------------------------------------------
+
+def _estimate_bytes(outs):
+    one = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[0, 0],
+                                 outs.estimate)
+    return runtime.tree_bytes(one)
+
+
+def _comm_run(kind, **kw):
+    model = ssm.oracle_configs()["ar1"]
+    k_sim, k_run = jax.random.split(jax.random.key(1))
+    _, zs = ssm.simulate(k_sim, model, 4)
+    dra = dist.DRAConfig(kind=kind, **kw)
+    outs, _ = emesh.run_filter(model, SIRConfig(n_particles=1024), dra,
+                               k_run, zs, P)
+    by = np.asarray(outs.diag["comm_bytes"])
+    st = np.asarray(outs.diag["comm_stages"])
+    assert (by == by[0, 0]).all() and (st == st[0, 0]).all(), \
+        "comm accounting must be static across frames and shards"
+    return int(by[0, 0]), int(st[0, 0]), outs
+
+
+def test_comm_accounting_matches_contract():
+    # ar1 state is one f32 per particle: pp = 4 bytes; estimate = 4 bytes
+    pp, step_bytes, step_stages = 4, 12 + 4, 4
+    cap, k_cap = 32, 64
+    n_stages = len(runtime.butterfly_schedule(P))
+    expect = {
+        "mpf": (4, 1),
+        "rna": (None, 2),                       # m depends on exchange_ratio
+        "butterfly": (n_stages * (8 + cap * (pp + 8)), 2 * n_stages),
+        "rpa": (4 + P * k_cap * (pp + 8), 2),
+    }
+    got = {}
+    for kind, (eb, es) in expect.items():
+        b, s, _ = _comm_run(kind)
+        got[kind] = b
+        assert s == es + step_stages, kind
+        if eb is not None:
+            assert b == eb + step_bytes, (kind, b, eb + step_bytes)
+    # the headline separation the full sweep certifies at 38.4M particles
+    assert got["butterfly"] * 4 <= got["rpa"], got

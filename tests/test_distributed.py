@@ -34,7 +34,8 @@ def worker_output():
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
-ALL_DRAS = ["mpf_", "rna_", "arna_", "rpa_gs", "rpa_sgs", "rpa_lgs"]
+ALL_DRAS = ["mpf_", "rna_", "arna_", "rpa_gs", "rpa_sgs", "rpa_lgs",
+            "butterfly_"]
 
 
 @pytest.mark.parametrize("tag", ALL_DRAS)
@@ -56,6 +57,26 @@ def test_arna_p_eff_bounds(worker_output):
 def test_rpa_lgs_fewest_links(worker_output):
     d = worker_output["dra"]
     assert d["rpa_lgs"]["links_max"] <= 4      # ≤ P/2 = 4 (paper Alg. 4)
+
+
+def test_butterfly_exact_and_cheap(worker_output):
+    """The bounded-slab butterfly never overflows or truncates on the real
+    8-shard mesh (§14.2 exactness lemmas) and undercuts RPA's all-to-all
+    comm volume by the paper-scaled ≥4x headline margin (§14.3)."""
+    d = worker_output["dra"]
+    b = d["butterfly_"]
+    assert b["overflow_total"] == 0, b
+    assert b["truncated_total"] == 0, b
+    assert b["bytes_per_frame"] * 4 <= d["rpa_lgs"]["bytes_per_frame"], d
+    # log2(8) pairwise rounds (x2: scalar + slab) + 4 step-level rounds
+    assert b["collective_stages"] == 2 * 3 + 4, b
+
+
+def test_comm_accounting_present_for_all_dras(worker_output):
+    for tag in ALL_DRAS:
+        r = worker_output["dra"][tag]
+        assert r["bytes_per_frame"] > 0, tag
+        assert r["collective_stages"] >= 5, tag   # ≥1 DRA + 4 step rounds
 
 
 def test_pallas_resample_backend_runs_sharded(worker_output):

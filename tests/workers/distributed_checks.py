@@ -51,7 +51,8 @@ def dra_checks() -> dict:
     for kind, extra in [("mpf", {}), ("rna", {"exchange_ratio": 0.25}),
                         ("arna", {}), ("rpa", {"scheduler": "gs"}),
                         ("rpa", {"scheduler": "sgs"}),
-                        ("rpa", {"scheduler": "lgs"})]:
+                        ("rpa", {"scheduler": "lgs"}),
+                        ("butterfly", {})]:
         tag = kind + "_" + extra.get("scheduler", "")
         pf = ParallelParticleFilter(
             model=model, sir=SIRConfig(n_particles=8192, ess_frac=0.5),
@@ -66,6 +67,10 @@ def dra_checks() -> dict:
                 np.asarray(res.estimates)).all()),
             "log_marginal_finite": bool(np.isfinite(
                 np.asarray(res.log_marginal)).all()),
+            # §14.3 accounting: static per frame, one sample suffices
+            "bytes_per_frame": int(np.asarray(res.diag["comm_bytes"])[0]),
+            "collective_stages": int(
+                np.asarray(res.diag["comm_stages"])[0]),
         }
         if kind == "arna":
             out[tag]["p_eff_max"] = float(np.asarray(res.diag["p_eff"]).max())
@@ -74,6 +79,11 @@ def dra_checks() -> dict:
             out[tag]["overflow_total"] = int(
                 np.asarray(res.diag["overflow"]).sum())
             out[tag]["links_max"] = int(np.asarray(res.diag["links"]).max())
+        if kind == "butterfly":
+            out[tag]["overflow_total"] = int(
+                np.asarray(res.diag["overflow"]).sum())
+            out[tag]["truncated_total"] = int(
+                np.asarray(res.diag["truncated"]).sum())
 
     # Pallas-kernel local resampling selected from DRAConfig (interpret
     # mode on CPU) — small run, just proves the kernel path works inside
