@@ -1,0 +1,174 @@
+"""Frontend latency under load → BENCH_latency.json.
+
+Load-generates the asyncio request plane (``repro.serve.frontend``) the
+way a fleet of streaming clients would and reports what a capacity
+planner needs (DESIGN.md §15.4):
+
+* ``profiles``: per-frame latency p50/p99 at full occupancy under two
+  arrival processes — ``poisson`` (independent exponential inter-arrival
+  per stream, the classic open-loop model) and ``bursty`` (frames arrive
+  in back-to-back bursts with matching mean rate, the pathological case
+  for a deadline-triggered coalescer).
+* ``slo_sweep``: p99 vs. admitted session count, past bank capacity —
+  over-capacity sessions are parked/resumed through the checkpoint
+  store, so their frames pay the migration round-trip.  The derived
+  ``sessions_per_node`` is the largest swept count whose p99 stays
+  under ``SLO_MS``.
+
+One ``ParticleSessionServer`` is reused across every run so tier
+programs compile once (``warmup``) and never bleed into a measured
+window.  Latency is measured by the frontend itself (submit-to-resolve
+per frame, ``Metrics`` series ``latency``).  As everywhere in
+``benchmarks/``, this 1-core CI container measures serialized work —
+ratios and knee points transfer, absolute numbers do not (DESIGN.md
+§10.5).  ``--smoke`` shrinks sizes and writes the gitignored
+``BENCH_latency.smoke.json`` instead of the committed baseline.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEST = os.path.join(REPO, "BENCH_latency.json")
+
+SLO_MS = 50.0          # target p99 per-frame latency for the SLO sweep
+CAPACITY = 8           # resident bank slots (B_max)
+RATE = 20.0            # mean frames/s per stream, both profiles
+BURST = 5              # frames per burst in the bursty profile
+
+
+def _make_server(smoke: bool):
+    from benchmarks.bench_serve import _lg_model
+    from repro.core import SIRConfig
+    from repro.serve import ParticleSessionServer
+
+    n = 128 if smoke else 512
+    return ParticleSessionServer(
+        model=_lg_model(), sir=SIRConfig(n_particles=n, ess_frac=0.5),
+        capacity=CAPACITY)
+
+
+async def _client(fe, sid: int, profile: str, t_end: float) -> int:
+    """One open-loop stream: submit frames per the arrival process until
+    ``t_end``, then drain every in-flight future."""
+    import jax
+    import numpy as np
+
+    rng = np.random.default_rng(1000 + sid)
+    stream = await fe.open(jax.random.key(sid))
+    loop = asyncio.get_running_loop()
+    pending = []
+    while loop.time() < t_end:
+        if profile == "poisson":
+            gap, burst = rng.exponential(1.0 / RATE), 1
+        else:                      # bursty: same mean rate, clumped
+            gap, burst = rng.exponential(BURST / RATE), BURST
+        await asyncio.sleep(gap)
+        if loop.time() >= t_end:
+            break
+        for _ in range(burst):
+            pending.append(await fe.submit(
+                stream, np.float32(rng.normal())))
+    results = await asyncio.gather(*pending)
+    await fe.close(stream)
+    return len(results)
+
+
+def _run_load(server, profile: str, n_sessions: int,
+              duration: float) -> dict:
+    """Drive ``n_sessions`` streams for ``duration`` seconds; return the
+    latency summary (ms) + throughput + scheduler counters."""
+    import numpy as np
+    from repro.serve import FrontendConfig, Metrics, ParticleFrontend
+
+    metrics = Metrics()
+    fe = ParticleFrontend(
+        server, FrontendConfig(max_delay=0.002, park_patience=0.05),
+        metrics=metrics)
+
+    async def main():
+        async with fe:
+            await fe.warmup(np.float32(0.0))
+            t_end = asyncio.get_running_loop().time() + duration
+            t0 = time.perf_counter()
+            frames = await asyncio.gather(
+                *(_client(fe, i, profile, t_end)
+                  for i in range(n_sessions)))
+            wall = time.perf_counter() - t0
+            return sum(frames), wall, metrics.snapshot()
+
+    frames, wall, snap = asyncio.run(main())
+    lat = snap["series"]["latency"]
+    return {
+        "profile": profile, "sessions": n_sessions,
+        "capacity": CAPACITY, "rate_per_stream": RATE,
+        "duration": duration, "frames": frames,
+        "frames_per_sec": frames / wall,
+        "p50_ms": lat["p50"] * 1e3, "p99_ms": lat["p99"] * 1e3,
+        "steps": snap["counters"].get("steps", 0),
+        "coalesce_mean": snap["series"].get(
+            "coalesce", {}).get("mean", 0.0),
+        "park_events": snap["counters"].get("park_events", 0),
+    }
+
+
+def run() -> list[dict]:
+    """benchmarks.run entry point — also writes BENCH_latency.json
+    (``--smoke`` writes the gitignored .smoke sibling instead)."""
+    smoke = "--smoke" in sys.argv
+    duration = 1.5 if smoke else 5.0
+    server = _make_server(smoke)
+    n = server.sir.n_particles
+
+    profiles = [_run_load(server, p, CAPACITY, duration)
+                for p in ("poisson", "bursty")]
+    sweep_counts = (4, 12) if smoke else (2, 4, 8, 12, 16)
+    slo_sweep = [_run_load(server, "poisson", c, duration)
+                 for c in sweep_counts]
+    meeting = [r["sessions"] for r in slo_sweep if r["p99_ms"] <= SLO_MS]
+    sessions_per_node = max(meeting) if meeting else 0
+    assert server.step_traces <= len(server.tiers), server.step_traces
+
+    dest = DEST.replace(".json", ".smoke.json") if smoke else DEST
+    with open(dest, "w") as f:
+        json.dump({"smoke": smoke, "slo_ms": SLO_MS,
+                   "particles": n, "profiles": profiles,
+                   "slo_sweep": slo_sweep,
+                   "sessions_per_node": sessions_per_node}, f, indent=1)
+
+    rows = []
+    for r in profiles:
+        rows.append({
+            "name": f"latency/{r['profile']}_{r['sessions']}s_n{n}",
+            "us_per_call": r["p50_ms"] * 1e3,
+            "derived": (f"p99 {r['p99_ms']:.1f} ms, "
+                        f"{r['frames_per_sec']:.0f} frames/s, "
+                        f"coalesce {r['coalesce_mean']:.1f}"),
+        })
+    for r in slo_sweep:
+        rows.append({
+            "name": f"latency/slo_{r['sessions']}sessions_n{n}",
+            "us_per_call": r["p99_ms"] * 1e3,
+            "derived": (f"p99 @ {r['sessions']} sessions "
+                        f"({r['park_events']} parks)"),
+        })
+    rows.append({
+        "name": f"latency/sessions_per_node_n{n}",
+        "us_per_call": SLO_MS * 1e3,
+        "derived": (f"{sessions_per_node} sessions/node @ "
+                    f"p99 <= {SLO_MS:.0f} ms"),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    dest = DEST.replace(".json", ".smoke.json") if "--smoke" in sys.argv \
+        else DEST
+    print(f"wrote {dest}", file=sys.stderr)

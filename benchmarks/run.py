@@ -28,6 +28,9 @@ SUITES = {
     "serve": ("benchmarks.bench_serve",
               "resident-session serving: occupancy/churn sweeps vs naive "
               "recompile baseline (BENCH_serve.json)"),
+    "latency": ("benchmarks.bench_latency",
+                "frontend load generator: Poisson/bursty arrival latency + "
+                "SLO capacity (BENCH_latency.json)"),
     "ssm": ("benchmarks.bench_ssm",
             "generic-SSM model families: single filter vs FilterBank B=8 "
             "(BENCH_ssm.json)"),

@@ -1,14 +1,32 @@
-"""Batched serving launcher: prefill + decode (greedy/sampled) or SMC
-particle decoding, optionally on a (data, model) mesh.
+"""Serving launchers: the LM decode path and the particle request plane.
+
+Two front ends share this entry point:
+
+* ``--mode greedy|sample|smc`` — batched LM decoding (prefill + jitted
+  decode scan, or SMC particle decoding), optionally on a simulated
+  multi-device mesh.  Timing separates one-off compile from steady
+  state: ``--warmup`` runs (default 1, the ``benchmarks/pf_worker.py``
+  convention) execute before the measured window, and the reported
+  tok/s is pure steady-state — the compile seconds are printed on their
+  own line instead of silently inflating the first measurement.
+* ``--mode sessions`` — the asyncio request plane (DESIGN.md §15): a
+  ``ParticleFrontend`` over a resident ``ParticleSessionServer`` bank,
+  driven by a synthetic Poisson client fleet, reporting p50/p99
+  per-frame latency and the scheduler's operational counters.  The
+  committed load benchmark lives in ``benchmarks/bench_latency.py``;
+  this mode is the interactive/smoke way to watch the plane run.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
-        --batch 4 --prompt-len 32 --steps 32 --mode smc
+        --batch 4 --prompt-len 32 --steps 32 --mode greedy
+    PYTHONPATH=src python -m repro.launch.serve --mode sessions \
+        --sessions 12 --capacity 8 --duration 3
 """
 import argparse
 import time
 
 
 def main() -> None:
+    """Parse args and dispatch to the LM or sessions front end."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-32b")
     ap.add_argument("--smoke", action="store_true")
@@ -17,9 +35,21 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--mode", default="greedy",
-                    choices=["greedy", "sample", "smc"])
+                    choices=["greedy", "sample", "smc", "sessions"])
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--particles", type=int, default=8)
+    ap.add_argument("--warmup", type=int, default=1,
+                    help="untimed compile/warmup runs before the "
+                         "measured window (LM modes)")
+    # sessions-mode knobs
+    ap.add_argument("--sessions", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="seconds of synthetic Poisson load (sessions)")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="per-session mean frames/s (sessions)")
+    ap.add_argument("--max-delay", type=float, default=0.005,
+                    help="scheduler deadline trigger in seconds")
     ap.add_argument("--_respawned", action="store_true")
     args = ap.parse_args()
 
@@ -27,6 +57,14 @@ def main() -> None:
         from repro.core import runtime
         runtime.respawn_with_host_devices(args.devices, "repro.launch.serve")
 
+    if args.mode == "sessions":
+        _serve_sessions(args)
+    else:
+        _serve_lm(args)
+
+
+def _serve_lm(args) -> None:
+    """LM decode modes with compile/steady-state separated timing."""
     import jax
 
     from repro.configs import get_config
@@ -44,25 +82,117 @@ def main() -> None:
             jax.random.key(1), (args.batch, args.prompt_len), 0,
             cfg.vocab_size)
 
-    t0 = time.time()
     if args.mode == "smc":
         smc = SMCDecodeConfig(n_particles=args.particles, steps=args.steps)
-        seqs, lw, log_z, ess = smc_decode(params, cfg, prompt, smc,
-                                          key=jax.random.key(2))
-        jax.block_until_ready(seqs)
-        dt = time.time() - t0
-        print(f"SMC decode {seqs.shape}: {dt:.2f}s "
-              f"({dt / args.steps * 1e3:.1f} ms/token-step), "
-              f"logZ={[round(float(z), 3) for z in log_z]}")
+
+        def run(key):
+            out = smc_decode(params, cfg, prompt, smc, key=key)
+            jax.block_until_ready(out[0])
+            return out
     else:
         temp = 0.0 if args.mode == "greedy" else args.temperature
-        out = generate(params, cfg, prompt, steps=args.steps,
-                       temperature=temp, key=jax.random.key(2))
-        jax.block_until_ready(out)
-        dt = time.time() - t0
-        tput = args.batch * args.steps / dt
-        print(f"{args.mode} decode {out.shape}: {dt:.2f}s "
+
+        def run(key):
+            out = generate(params, cfg, prompt, steps=args.steps,
+                           temperature=temp, key=key)
+            jax.block_until_ready(out)
+            return out
+
+    # warmup runs eat the compile; the measured window is steady state
+    # (the old single-window measurement reported compile+prefill+decode
+    # as one conflated "tok/s" — useless for comparing runs)
+    t0 = time.perf_counter()
+    for i in range(max(args.warmup, 0)):
+        run(jax.random.key(100 + i))
+    compile_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = run(jax.random.key(2))
+    steady_s = time.perf_counter() - t0
+
+    if args.mode == "smc":
+        seqs, lw, log_z, ess = out
+        print(f"compile+warmup ({args.warmup} runs): {compile_s:.2f}s")
+        print(f"SMC decode {seqs.shape}: {steady_s:.2f}s steady "
+              f"({steady_s / args.steps * 1e3:.1f} ms/token-step), "
+              f"logZ={[round(float(z), 3) for z in log_z]}")
+    else:
+        tput = args.batch * args.steps / steady_s
+        print(f"compile+warmup ({args.warmup} runs): {compile_s:.2f}s")
+        print(f"{args.mode} decode {out.shape}: {steady_s:.2f}s steady "
               f"({tput:.1f} tok/s batch throughput)")
+
+
+def _serve_sessions(args) -> None:
+    """Drive the asyncio request plane with a synthetic Poisson fleet."""
+    import asyncio
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import SIRConfig
+    from repro.core.smc import StateSpaceModel
+    from repro.serve import (FrontendConfig, ParticleFrontend,
+                             ParticleSessionServer)
+
+    def lg_model():
+        a, q, h, r0 = 0.9, 0.5, 1.0, 0.4
+
+        def init_sampler(key, n):
+            return jax.random.normal(key, (n, 1)) * 2.0
+
+        def dynamics_sample(key, s):
+            return a * s + jnp.sqrt(q) * jax.random.normal(key, s.shape)
+
+        def log_likelihood(s, z):
+            return -0.5 * (z - h * s[:, 0]) ** 2 / r0
+
+        return StateSpaceModel(init_sampler, dynamics_sample,
+                               log_likelihood, state_dim=1)
+
+    async def client(fe, sid, rng, until, latencies):
+        stream = await fe.open(jax.random.key(sid))
+        futs = []
+        loop = asyncio.get_running_loop()
+        while loop.time() < until:
+            await asyncio.sleep(rng.exponential(1.0 / args.rate))
+            futs.append(await fe.submit(stream, np.float32(rng.normal())))
+        for res in await asyncio.gather(*futs):
+            latencies.append(res.latency)
+        await fe.close(stream)
+
+    async def run():
+        server = ParticleSessionServer(
+            model=lg_model(),
+            sir=SIRConfig(n_particles=1024, ess_frac=0.5),
+            capacity=args.capacity)
+        latencies: list[float] = []
+        async with ParticleFrontend(
+                server, FrontendConfig(max_delay=args.max_delay)) as fe:
+            t0 = time.perf_counter()         # compile before traffic, and
+            await fe.warmup(np.float32(0.0))  # report it separately
+            print(f"compile+warmup ({len(server.tiers)} tiers): "
+                  f"{time.perf_counter() - t0:.2f}s")
+            until = asyncio.get_running_loop().time() + args.duration
+            await asyncio.gather(*(
+                client(fe, i, np.random.default_rng(i), until, latencies)
+                for i in range(args.sessions)))
+            snap = fe.snapshot()
+        lat = np.asarray(latencies)
+        print(f"sessions={args.sessions} capacity={args.capacity} "
+              f"frames={lat.size} "
+              f"p50={np.percentile(lat, 50) * 1e3:.1f}ms "
+              f"p99={np.percentile(lat, 99) * 1e3:.1f}ms")
+        c = snap["counters"]
+        print(f"steps={c.get('steps', 0):.0f} "
+              f"coalesce_mean={snap['series']['coalesce']['mean']:.2f} "
+              f"parks={c.get('park_events', 0):.0f} "
+              f"resumes={c.get('resume_events', 0):.0f} "
+              f"tier_hits={snap['tier_hits']} "
+              f"step_traces={snap['step_traces']}")
+
+    asyncio.run(run())
 
 
 if __name__ == "__main__":

@@ -1,9 +1,16 @@
-"""Serving layer: batched LM generation, SMC particle decoding, and the
-resident particle-filter session engine (``repro.serve.sessions``)."""
+"""Serving layer: batched LM generation, SMC particle decoding, the
+resident particle-filter session engine (``repro.serve.sessions``), and
+the asyncio request plane with continuous batching
+(``repro.serve.frontend``, DESIGN.md §15)."""
 from repro.serve.engine import generate
+from repro.serve.frontend import (FrameResult, FrontendConfig,
+                                  ParticleFrontend, StreamHandle)
+from repro.serve.metrics import Metrics
 from repro.serve.sessions import (ParticleSessionServer, SessionHandle,
                                   SuspendedSession)
 from repro.serve.smc_decode import SMCDecodeConfig, smc_decode
 
 __all__ = ["generate", "smc_decode", "SMCDecodeConfig",
-           "ParticleSessionServer", "SessionHandle", "SuspendedSession"]
+           "ParticleSessionServer", "SessionHandle", "SuspendedSession",
+           "ParticleFrontend", "FrontendConfig", "FrameResult",
+           "StreamHandle", "Metrics"]

@@ -1,7 +1,11 @@
 """Batched generation engine: prefill once, decode with a KV cache.
 
 The decode loop is a single jitted ``lax.scan`` (one compile for any
-generation length); sampling is greedy or temperature-categorical.
+generation length); sampling is greedy or temperature-categorical, and
+greediness is the only static sampling flag — all temperatures > 0
+share one compiled program (``tests/test_engine.py`` pins the trace
+count).  ``generate`` returns tokens 1..steps including the
+prefill-sampled first token.
 """
 from __future__ import annotations
 
@@ -17,24 +21,32 @@ from repro.models.lm import model as M
 Array = jax.Array
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "steps", "temperature"))
+@functools.partial(jax.jit, static_argnames=("cfg", "steps", "greedy"))
 def _decode_loop(params, cfg: ArchConfig, caches, first_tokens, start_pos,
-                 key, steps: int, temperature: float):
+                 key, temperature, steps: int, greedy: bool):
+    # ``greedy`` is the ONLY sampling flag that shapes the trace;
+    # ``temperature`` rides along as a traced operand, so one compiled
+    # program serves every temperature > 0 (it used to be a static
+    # argument — a full recompile per distinct temperature).
     def body(carry, _):
         tokens, pos, caches, key = carry
         logits, caches = M.forward_decode(params, cfg, tokens, pos, caches)
         logits = logits[:, 0].astype(jnp.float32)
         key, k_s = jax.random.split(key)
-        if temperature > 0:
-            nxt = jax.random.categorical(k_s, logits / temperature, axis=-1)
-        else:
+        if greedy:
             nxt = jnp.argmax(logits, axis=-1)
+        else:
+            nxt = jax.random.categorical(k_s, logits / temperature, axis=-1)
         nxt = nxt.astype(jnp.int32)
         if cfg.n_codebooks > 1:
             out_tok = nxt[:, None, :] if nxt.ndim == 2 else nxt[:, None]
         else:
             out_tok = nxt[:, None]
-        return (out_tok, pos + 1, caches, key), out_tok[:, 0]
+        # emit the INCOMING token: the scan then yields the prefill-
+        # sampled first token followed by steps-1 decode samples, so the
+        # returned sequence includes token 1 (it used to emit ``out_tok``
+        # and silently drop the first sampled token)
+        return (out_tok, pos + 1, caches, key), tokens[:, 0]
 
     carry = (first_tokens, start_pos, caches, key)
     (_, _, caches, _), toks = jax.lax.scan(body, carry, None, length=steps)
@@ -44,7 +56,13 @@ def _decode_loop(params, cfg: ArchConfig, caches, first_tokens, start_pos,
 def generate(params, cfg: ArchConfig, prompt: Array, *, steps: int = 32,
              temperature: float = 0.0, key: Optional[Array] = None,
              img: Optional[Array] = None):
-    """prompt: (B, T0[, K]) int32 → generated (B, steps[, K])."""
+    """prompt: (B, T0[, K]) int32 → generated (B, steps[, K]).
+
+    The returned sequence is tokens 1..steps — the prefill-sampled first
+    token included (the decode scan emits its carry, see
+    ``_decode_loop``).  ``temperature == 0`` is greedy argmax decoding;
+    any ``temperature > 0`` shares one compiled decode program.
+    """
     key = key if key is not None else jax.random.key(0)
     b, t0 = prompt.shape[:2]
     max_len = t0 + steps + 1
@@ -60,6 +78,8 @@ def generate(params, cfg: ArchConfig, prompt: Array, *, steps: int = 32,
     first = first.astype(jnp.int32)
     first = first[:, None] if cfg.n_codebooks <= 1 else first[:, None, :]
     out, caches = _decode_loop(params, cfg, caches, first,
-                               jnp.asarray(t0, jnp.int32), key, steps,
-                               temperature)
+                               jnp.asarray(t0, jnp.int32), key,
+                               jnp.asarray(max(temperature, 1e-6),
+                                           jnp.float32),
+                               steps, temperature <= 0)
     return out

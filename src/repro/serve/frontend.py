@@ -1,0 +1,423 @@
+"""Asyncio request plane over the resident session bank.
+
+``ParticleFrontend`` is the serving loop the paper's load-balanced
+runtime promises (§III) re-expressed in LLM-serving shape: client
+coroutines ``open()`` streams and ``submit()`` observation frames; a
+scheduler coroutine coalesces pending arrivals into bank steps
+(**continuous batching** — a step fires when a batch-size *or* deadline
+trigger is met, never on a fixed cadence), and the underlying
+``ParticleSessionServer`` runs each step through its smallest covering
+occupancy tier (DESIGN.md §15.2).  The control plane is:
+
+* **Triggers** (§15.1): a tick fires when the number of sessions with a
+  pending frame reaches ``min(max_batch, live streams)``, or when the
+  oldest pending frame has waited ``max_delay`` seconds.  Sparse traffic
+  pays at most ``max_delay`` of coalescing latency; dense traffic steps
+  at full batches and never waits.
+* **Admission / backpressure** (§15.3): ``open`` always admits — a
+  stream with no free slot starts *parked* and is attached lazily by the
+  scheduler.  When parked work waits, the scheduler suspends an idle
+  resident session through ``repro.checkpoint.store`` (the PR-4
+  migration path) and resumes the parked one; ``park_patience`` bounds
+  starvation by force-rotating the least-recently-active resident.
+  Per-stream queues longer than ``max_queue`` make ``submit`` await —
+  backpressure reaches the client as latency, not as dropped frames.
+* **Observability**: every decision increments ``repro.serve.metrics``
+  counters/series (queue depth, coalesce factor, park/resume events,
+  per-frame latency); ``snapshot()`` merges the server's tier-hit and
+  trace counters.
+
+Threading contract: the frontend owns its server.  All server calls
+happen from the scheduler (bank steps and the surrounding bookkeeping
+run in a worker thread via ``run_in_executor``, one at a time), so the
+event loop keeps accepting submissions while the device computes —
+that overlap is what the continuous-batching latency win is made of.
+
+Lifecycle::
+
+    server = ParticleSessionServer(model=model, sir=sir, capacity=64)
+    async with ParticleFrontend(server, FrontendConfig()) as fe:
+        stream = await fe.open(jax.random.key(7))
+        fut = await fe.submit(stream, frame)     # backpressure-aware
+        out = await fut                          # FrameResult
+        await fe.close(stream)
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.serve import metrics as metrics_mod
+from repro.serve import sessions
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Request-plane knobs (DESIGN.md §15.1/§15.3).
+
+    Attributes:
+      max_batch: batch trigger — fire when this many sessions have a
+        pending frame (``None`` = the server's slot capacity).  The
+        effective trigger is ``min(max_batch, live streams)`` so a
+        half-empty frontend never waits for phantom arrivals.
+      max_delay: deadline trigger in seconds — the longest any pending
+        frame may wait for coalescing before a step fires anyway.  This
+        is the latency the scheduler *spends* to buy batch efficiency;
+        0 degenerates to step-per-arrival.
+      max_queue: per-stream in-flight frame bound; ``submit`` awaits
+        (backpressure) while a stream already has this many undelivered
+        frames.
+      park_patience: seconds a parked stream's work may wait before the
+        scheduler force-rotates it in by suspending the least-recently
+        active resident session (bounds starvation when every slot is
+        busy).
+      park_dir: directory for parked-session checkpoints (one
+        subdirectory per stream, written via ``repro.checkpoint.store``);
+        ``None`` uses a fresh temporary directory.
+    """
+
+    max_batch: int | None = None
+    max_delay: float = 0.002
+    max_queue: int = 64
+    park_patience: float = 0.05
+    park_dir: str | None = None
+
+
+@dataclasses.dataclass
+class FrameResult:
+    """Per-frame filter output delivered to the submitting client.
+
+    Attributes:
+      estimate: host-side MMSE state estimate for this frame.
+      ess: effective sample size after reweighting.
+      log_marginal: this frame's log-marginal-likelihood increment.
+      resampled: whether the ESS trigger fired a resampling pass.
+      latency: seconds from ``submit`` to result delivery (queueing +
+        coalescing + compute — the number BENCH_latency.json quantiles).
+    """
+
+    estimate: np.ndarray
+    ess: float
+    log_marginal: float
+    resampled: bool
+    latency: float
+
+
+class StreamHandle:
+    """Client-side ticket for one open stream (opaque; all state is
+    frontend-internal)."""
+
+    def __init__(self, sid: int, key: Array):
+        self.sid = sid
+        self._key = key                      # initial PRNG key (pre-attach)
+        self._session: Optional[sessions.SessionHandle] = None
+        self._sus: Optional[sessions.SuspendedSession] = None
+        self._pending: list[tuple] = []      # (frame, future, t_arrive)
+        self._wait_since: float | None = None
+        self._last_active = 0.0
+        self._closed = False
+        self._not_full = asyncio.Event()
+        self._not_full.set()
+
+    @property
+    def attached(self) -> bool:
+        """True while the stream holds a resident bank slot."""
+        return self._session is not None
+
+    @property
+    def queue_depth(self) -> int:
+        """Frames submitted but not yet delivered back."""
+        return len(self._pending)
+
+
+class ParticleFrontend:
+    """The asyncio request plane: continuous batching + admission control
+    over one ``ParticleSessionServer`` (module docstring has the full
+    contract; DESIGN.md §15 the design discussion)."""
+
+    def __init__(self, server: sessions.ParticleSessionServer,
+                 config: FrontendConfig | None = None,
+                 metrics: metrics_mod.Metrics | None = None):
+        self.server = server
+        self.config = config or FrontendConfig()
+        self.metrics = metrics or metrics_mod.Metrics()
+        self._streams: dict[int, StreamHandle] = {}
+        self._sids = itertools.count()
+        self._wake = asyncio.Event()
+        self._idle = asyncio.Event()
+        self._idle.set()
+        self._task: asyncio.Task | None = None
+        self._park_root = self.config.park_dir
+        self._tmpdir: tempfile.TemporaryDirectory | None = None
+
+    # -- lifecycle ----------------------------------------------------------
+    async def start(self) -> None:
+        """Spawn the scheduler coroutine (idempotent)."""
+        if self._task is None:
+            self._task = asyncio.get_running_loop().create_task(
+                self._scheduler())
+
+    async def stop(self) -> None:
+        """Drain all pending work, then stop the scheduler."""
+        if self._task is not None:
+            await self.drain()
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+        if self._tmpdir is not None:
+            self._tmpdir.cleanup()
+            self._tmpdir = None
+
+    async def __aenter__(self) -> "ParticleFrontend":
+        """``async with`` starts the scheduler..."""
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        """...and drains + stops it on exit."""
+        await self.stop()
+
+    # -- client surface -----------------------------------------------------
+    async def open(self, key: Array) -> StreamHandle:
+        """Admit a new client stream seeded by PRNG ``key``.
+
+        Always succeeds: with a free slot the stream is attached on the
+        next scheduler pass; over capacity it starts parked and competes
+        for a slot once it has work (§15.3).  The stream's trajectory is
+        bitwise the standalone filter's regardless of how often it gets
+        parked and resumed in between.
+        """
+        stream = StreamHandle(next(self._sids), key)
+        self._streams[stream.sid] = stream
+        self._wake.set()
+        return stream
+
+    async def submit(self, stream: StreamHandle, frame: Any) -> asyncio.Future:
+        """Enqueue one observation frame; returns a future ``FrameResult``.
+
+        Awaits while the stream already has ``max_queue`` undelivered
+        frames (per-stream backpressure) — so a client that outpaces the
+        bank slows down instead of ballooning the queue.
+        """
+        if stream._closed:
+            raise ValueError(f"stream {stream.sid} is closed")
+        while stream.queue_depth >= self.config.max_queue:
+            self.metrics.inc("backpressure_waits")
+            stream._not_full.clear()
+            await stream._not_full.wait()
+            if stream._closed:
+                raise ValueError(f"stream {stream.sid} is closed")
+        loop = asyncio.get_running_loop()
+        fut: asyncio.Future = loop.create_future()
+        stream._pending.append((np.array(frame), fut, loop.time()))
+        if not stream.attached and stream._wait_since is None:
+            stream._wait_since = loop.time()
+        self._idle.clear()
+        self._wake.set()
+        return fut
+
+    async def close(self, stream: StreamHandle) -> None:
+        """Retire the stream: undelivered frames are cancelled and the
+        slot (if any) is released on the next scheduler pass."""
+        stream._closed = True
+        stream._not_full.set()
+        for _, fut, _ in stream._pending:
+            if not fut.done():
+                fut.cancel()
+        stream._pending.clear()
+        self._wake.set()
+
+    async def drain(self) -> None:
+        """Wait until every submitted frame has been delivered."""
+        while True:
+            if not any(st._pending for st in self._streams.values()
+                       if not st._closed):
+                return
+            self._idle.clear()
+            self._wake.set()
+            await self._idle.wait()
+
+    async def warmup(self, example_frame: Any) -> None:
+        """Pre-compile every occupancy-tier program off the event loop
+        (``server.warm_tiers``) so no client pays a compile on the hot
+        path — call once before opening traffic."""
+        await asyncio.get_running_loop().run_in_executor(
+            None, self.server.warm_tiers, example_frame)
+
+    def snapshot(self) -> dict:
+        """Operational metrics + the server's tier/trace counters."""
+        snap = self.metrics.snapshot()
+        snap["tier_hits"] = dict(self.server.tier_hits)
+        snap["step_traces"] = self.server.step_traces
+        snap["occupancy"] = self.server.occupancy
+        return snap
+
+    # -- scheduler ----------------------------------------------------------
+    async def _scheduler(self) -> None:
+        try:
+            await self._schedule_forever()
+        except asyncio.CancelledError:
+            raise
+        except BaseException as err:
+            # a dying scheduler must not strand awaiting clients: fail
+            # every undelivered future, release drain(), then surface
+            # the error at stop()/await-task time
+            for st in self._streams.values():
+                for _, fut, _ in st._pending:
+                    if not fut.done():
+                        fut.set_exception(err)
+                st._pending.clear()
+            self._idle.set()
+            raise
+
+    async def _schedule_forever(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            now = loop.time()
+            self._reap_closed()
+            self._rebalance(now)
+            ready = [st for st in self._streams.values()
+                     if st.attached and st._pending and not st._closed]
+            waiting = [st for st in self._streams.values()
+                       if not st.attached and st._pending and not st._closed]
+            if not ready:
+                if not waiting:
+                    self._idle.set()
+                await self._wait_for_wake(None if not waiting
+                                          else self.config.park_patience)
+                continue
+            oldest = min(st._pending[0][2] for st in ready)
+            live = sum(1 for st in self._streams.values() if not st._closed)
+            target = min(self.config.max_batch or self.server.capacity,
+                         self.server.capacity, live)
+            deadline = oldest + self.config.max_delay
+            if len(ready) < target and now < deadline:
+                await self._wait_for_wake(deadline - now)
+                continue
+            work = []
+            for st in ready:
+                frame, fut, t_arrive = st._pending.pop(0)
+                st._not_full.set()
+                work.append((st, frame, fut, t_arrive))
+            self.metrics.observe("queue_depth", sum(
+                st.queue_depth for st in self._streams.values()))
+            self.metrics.observe("coalesce", len(work))
+            rows = await loop.run_in_executor(None, self._fire, work)
+            done = loop.time()
+            self.metrics.inc("steps")
+            for (st, _, fut, t_arrive), row in zip(work, rows):
+                st._last_active = done
+                latency = done - t_arrive
+                self.metrics.inc("frames")
+                self.metrics.observe("latency", latency)
+                if not fut.done():
+                    fut.set_result(FrameResult(
+                        estimate=row[0], ess=row[1], log_marginal=row[2],
+                        resampled=row[3], latency=latency))
+
+    async def _wait_for_wake(self, timeout: float | None) -> None:
+        """Sleep until new work arrives or ``timeout`` elapses."""
+        try:
+            await asyncio.wait_for(self._wake.wait(), timeout)
+        except asyncio.TimeoutError:
+            pass
+        self._wake.clear()
+
+    def _fire(self, work: list[tuple]) -> list[tuple]:
+        """(worker thread) Submit one frame per ready stream, run ONE
+        bank step, and read each stream's freshest outputs to host."""
+        for st, frame, _, _ in work:
+            self.server.submit(st._session, frame)
+        self.server.step()
+        rows = []
+        for st, _, _, _ in work:
+            est, ess, log_z, res = self.server.latest(st._session)
+            rows.append((np.asarray(est), float(ess), float(log_z),
+                         bool(res)))
+        return rows
+
+    # -- slot management (admission control, §15.3) -------------------------
+    def _reap_closed(self) -> None:
+        """Release slots of closed streams and forget them."""
+        for sid in [s for s, st in self._streams.items() if st._closed]:
+            st = self._streams.pop(sid)
+            if st.attached:
+                self.server.detach(st._session)
+                st._session = None
+
+    def _rebalance(self, now: float) -> None:
+        """Assign slots: attach/resume waiting streams into free slots,
+        park idle residents to make room, and force-rotate when parked
+        work has waited past ``park_patience``."""
+        waiting = sorted((st for st in self._streams.values()
+                          if not st.attached and st._pending
+                          and not st._closed),
+                         key=lambda st: st._wait_since or now)
+        for st in waiting:
+            if self.server.occupancy < self.server.capacity:
+                self._give_slot(st, now)
+                continue
+            victim = self._pick_victim(
+                require_idle=(now - (st._wait_since or now)
+                              < self.config.park_patience))
+            if victim is None:
+                break                       # nobody safely evictable yet
+            self._park(victim)
+            self._give_slot(st, now)
+        # spare slots warm up idle (frameless) streams so their first
+        # frame skips the attach on the hot path
+        for st in self._streams.values():
+            if self.server.occupancy >= self.server.capacity:
+                break
+            if not st.attached and not st._closed and not st._pending:
+                self._give_slot(st, now)
+
+    def _give_slot(self, st: StreamHandle, now: float) -> None:
+        if st._sus is not None:                 # resume a parked session
+            st._session = self.server.resume(st._sus)
+            st._sus = None
+            self.metrics.inc("resume_events")
+        else:                                   # first attach
+            st._session = self.server.attach(st._key)
+        st._wait_since = None
+        st._last_active = now
+
+    def _pick_victim(self, require_idle: bool) -> StreamHandle | None:
+        """The least-recently-active resident stream; with
+        ``require_idle`` only streams with no queued frames qualify (the
+        no-thrash default until ``park_patience`` expires)."""
+        candidates = [st for st in self._streams.values()
+                      if st.attached and not st._closed
+                      and (not require_idle or not st._pending)]
+        if not candidates:
+            return None
+        return min(candidates, key=lambda st: st._last_active)
+
+    def _park(self, st: StreamHandle) -> None:
+        """Suspend a resident session through ``checkpoint/store`` (its
+        durable copy) and keep the host-side snapshot for the resume."""
+        st._sus = self.server.suspend(st._session,
+                                      directory=self._park_path(st))
+        st._session = None
+        self.metrics.inc("park_events")
+
+    def _park_path(self, st: StreamHandle) -> str:
+        if self._park_root is None:
+            self._tmpdir = self._tmpdir or tempfile.TemporaryDirectory(
+                prefix="ppf-park-")
+            self._park_root = self._tmpdir.name
+        path = os.path.join(self._park_root, f"stream-{st.sid}")
+        os.makedirs(path, exist_ok=True)
+        return path

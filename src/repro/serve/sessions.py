@@ -144,8 +144,9 @@ class _Session:
         self.uid = uid
         self.slot = slot
         self.queue: list[Any] = []       # frames not yet stepped (FIFO)
-        self.pending: list[tuple] = []   # (est, ess, log_z, res) rows not
-        self.stacked: dict | None = None  # ...yet folded into this cache
+        self.pending: list[tuple] = []   # (outs, row) refs not yet folded
+        self.stacked: dict | None = None  # ...into this host-side cache
+        self.last: tuple | None = None   # most recent (outs, row) ref
         self.frames_done = 0
 
 
@@ -174,6 +175,18 @@ class ParticleSessionServer:
     Sessions are driven by ``submit`` (enqueue one frame) and ``step``
     (advance every slot that has a pending frame by one frame);
     ``result`` drains and returns the ``FilterResult`` trajectory so far.
+
+    Occupancy tiers (DESIGN.md §15.2): on the single-device path each
+    tick gathers only the ready slots into the smallest power-of-two
+    bucket ≥ their count, steps that compact bank, and scatters the
+    carries back — so a sparse bank runs a small program instead of
+    paying for all ``B_max`` slots (the BENCH_serve.json zero-churn
+    0.3× tax).  One jitted tier program exists per distinct bucket
+    size, so ``step_traces`` is bounded by ``len(tiers)`` rather than
+    staying at exactly 1; it is still churn-invariant (re-visiting a
+    tier never retraces).  Mesh-sharded banks keep the single
+    full-capacity program — a cross-shard gather would turn a local
+    reindex into a collective.
     """
 
     def __init__(self, model: ssm_base.StateSpaceModel, sir: smc.SIRConfig,
@@ -202,6 +215,20 @@ class ParticleSessionServer:
         self._by_slot: dict[int, int] = {}              # slot -> uid
         self._frame_spec: tuple | None = None           # (shape, dtype)
         self._step_traces = 0
+        # occupancy tiers: powers of two up to capacity (always including
+        # capacity itself).  Mesh banks run the one full-capacity program
+        # — tier-gathering across bank shards would need a collective.
+        if self.mesh is None:
+            self.tiers = tuple(sorted(
+                {min(1 << i, capacity) for i in
+                 range(capacity.bit_length() + 1)} | {capacity}))
+        else:
+            self.tiers = (capacity,)
+        self.tier_hits: dict[int, int] = {t: 0 for t in self.tiers}
+        # device-resident (idx, active) routing arrays per recurring ready
+        # set: steady-state traffic re-steps the same slots every tick, so
+        # re-uploading an identical route each step is pure overhead
+        self._route_cache: dict[tuple, tuple] = {}
         # one canonical carry sharding (slots over bank_axis): the init
         # and slot-write programs emit it via out_shardings, so the
         # resident step only ever sees ONE input sharding+layout —
@@ -227,6 +254,23 @@ class ParticleSessionServer:
                 step_fn, self.mesh, in_specs=(spec, spec, spec),
                 out_specs=(spec, spec))
         self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+        def tier_fn(carry, idx, frames, active):
+            # gather the ready slots into a (T,)-slot compact bank, run
+            # the T-sized step, scatter the carries back.  ``idx`` holds
+            # DISTINCT slot ids (ready first, masked-off padding after),
+            # so the scatter is collision-free; padded lanes carry their
+            # slot's frozen state bitwise through the masked step, making
+            # their write-back a value-level no-op.  jit keys its cache
+            # by the (T,) shape: one trace + executable per tier ever.
+            self._step_traces += 1      # trace-time side effect only
+            sub = jax.tree_util.tree_map(lambda c: c[idx], carry)
+            sub, outs = bank_step(sub, (frames, active))
+            carry = jax.tree_util.tree_map(
+                lambda c, x: c.at[idx].set(x), carry, sub)
+            return carry, outs
+
+        self._tier_fn = jax.jit(tier_fn, donate_argnums=(0,))
         # carry-producing helpers emit the canonical bank sharding, so an
         # attach never hands the step a differently-sharded bank (which
         # would cost a reshard + an executable per provenance)
@@ -247,22 +291,28 @@ class ParticleSessionServer:
     # -- introspection ------------------------------------------------------
     @property
     def step_traces(self) -> int:
-        """Times the resident step was traced — 1 after any churn pattern
-        (the zero-retrace contract; see also ``jit_cache_size``)."""
+        """Times a resident step program was traced.  Bounded by
+        ``len(self.tiers)`` after ANY churn pattern (the tiered
+        zero-retrace contract, DESIGN.md §15.2): each occupancy tier
+        compiles once ever, and membership churn inside a tier never
+        retraces.  Mesh servers have a single full-capacity tier, so the
+        bound degenerates to the original ``== 1`` contract."""
         return self._step_traces
 
     def jit_cache_size(self) -> int | None:
         """The jit executable-cache size of the resident step (None when
         the running JAX version does not expose ``_cache_size``).
 
-        Single-device servers hold exactly 1 executable for life.  On a
-        mesh the count stabilizes at ≤ 2 — attach-written and
-        step-produced carries carry different *layout metadata* (None vs
-        concrete, same physical row-major layout) in current JAX, so the
-        executable cache keys them separately once — and, the part that
-        matters, it never grows with churn (pinned by the mesh test in
+        Single-device servers hold at most one executable per occupancy
+        tier for life (``<= len(self.tiers)``).  On a mesh the count
+        stabilizes at ≤ 2 — attach-written and step-produced carries
+        carry different *layout metadata* (None vs concrete, same
+        physical row-major layout) in current JAX, so the executable
+        cache keys them separately once — and, the part that matters, it
+        never grows with churn (pinned by the mesh test in
         ``tests/test_sessions.py``)."""
-        size = getattr(self._step_fn, "_cache_size", None)
+        fn = self._step_fn if self.mesh is not None else self._tier_fn
+        size = getattr(fn, "_cache_size", None)
         return size() if callable(size) else None
 
     @property
@@ -319,29 +369,147 @@ class ParticleSessionServer:
     def step(self) -> int:
         """Advance every slot with a pending frame by ONE frame.
 
-        Builds the ``(B_max,)`` active mask and frame batch for this tick
-        and runs the resident step — one program launch regardless of
-        which or how many slots participate.  Returns the number of
-        sessions stepped (0 = nothing pending, no launch).
+        Single-device servers run the smallest occupancy-tier program
+        covering this tick's ready count (gather → T-slot step → scatter,
+        DESIGN.md §15.2); mesh servers run the one full-capacity program.
+        Either way it is one program launch per tick.  Returns the number
+        of sessions stepped (0 = nothing pending, no launch).
         """
-        ready = [s for s in self._sessions.values() if s.queue]
+        ready = sorted((s for s in self._sessions.values() if s.queue),
+                       key=lambda s: s.slot)
         if not ready:
             return 0
+        if self.mesh is not None:
+            return self._step_full(ready)
+        return self._step_tiered(ready)
+
+    def _step_full(self, ready: list[_Session]) -> int:
+        """One full-capacity launch (the mesh path: slot order is the
+        shard layout, so slots stay in place and inactivity is a mask)."""
         shape, dtype = self._frame_spec
         frames = np.zeros((self.capacity,) + shape, dtype)
         active = np.zeros((self.capacity,), bool)
         for sess in ready:
             frames[sess.slot] = sess.queue.pop(0)
             active[sess.slot] = True
+        self.tier_hits[self.capacity] += 1
         self._carry, outs = self._step_fn(self._carry, jnp.asarray(frames),
                                           jnp.asarray(active))
-        for sess in ready:
-            i = sess.slot
-            sess.pending.append(tuple(jax.tree_util.tree_map(
-                lambda x: x[i], (outs.estimate, outs.ess,
-                                 outs.log_marginal, outs.resampled))))
-            sess.frames_done += 1
+        self._record_outputs(ready, [s.slot for s in ready], outs)
         return len(ready)
+
+    def _step_tiered(self, ready: list[_Session]) -> int:
+        """Gather-step-scatter through the smallest covering tier."""
+        tier = next(t for t in self.tiers if t >= len(ready))
+        shape, dtype = self._frame_spec
+        frames = np.zeros((tier,) + shape, dtype)
+        for row, sess in enumerate(ready):
+            frames[row] = sess.queue.pop(0)
+        idx, active = self._route(tier, tuple(s.slot for s in ready))
+        self.tier_hits[tier] += 1
+        self._carry, outs = self._tier_fn(self._carry, idx,
+                                          jnp.asarray(frames), active)
+        self._record_outputs(ready, range(len(ready)), outs)
+        return len(ready)
+
+    def _route(self, tier: int, slots: tuple) -> tuple:
+        """Device-resident ``(idx, active)`` for this tick's ready set.
+
+        Padding rows use DISTINCT idle slots (``capacity - ready >=
+        tier - ready``, so there are always enough): their masked lanes
+        freeze the carry bitwise, making the scatter write-back a no-op.
+        Routes recur tick after tick in steady traffic, so the arrays are
+        cached on device instead of re-uploaded per step.
+        """
+        cached = self._route_cache.get((tier, slots))
+        if cached is None:
+            active = np.zeros((tier,), bool)
+            active[:len(slots)] = True
+            idx = np.zeros((tier,), np.int32)
+            idx[:len(slots)] = slots
+            pad = (s for s in range(self.capacity) if s not in set(slots))
+            for row in range(len(slots), tier):
+                idx[row] = next(pad)
+            if len(self._route_cache) >= 256:    # bounded under any churn
+                self._route_cache.clear()
+            cached = (jnp.asarray(idx), jnp.asarray(active))
+            self._route_cache[(tier, slots)] = cached
+        return cached
+
+    def _record_outputs(self, ready: list[_Session], rows, outs) -> None:
+        # reference the batched outs + row index; slicing happens lazily
+        # at read time (``latest`` / ``_stack_rows``) — per-step device
+        # indexing would cost ~4 dispatches per ready session per tick,
+        # which dominated the serving tick before the tiered rework
+        for sess, i in zip(ready, rows):
+            ref = (outs, i)
+            sess.pending.append(ref)
+            sess.last = ref
+            sess.frames_done += 1
+
+    @staticmethod
+    def _materialize_row(ref: tuple) -> tuple:
+        """Resolve one ``(outs, row)`` reference to host-side
+        ``(estimate, ess, log_marginal, resampled)`` NumPy values."""
+        outs, i = ref
+        return tuple(jax.tree_util.tree_map(
+            lambda x: np.asarray(x[i]),
+            (outs.estimate, outs.ess, outs.log_marginal, outs.resampled)))
+
+    def warm_tiers(self, example_frame: Any) -> None:
+        """Compile every occupancy-tier step program ahead of traffic.
+
+        Runs each tier once with an all-inactive mask (every carry is
+        frozen bitwise by the mask, so this is a value-level no-op) —
+        after it, no client ever pays a compile on the serving hot path.
+        ``example_frame`` fixes the server's frame shape/dtype the same
+        way a first ``submit`` would.
+        """
+        frame = np.array(example_frame)
+        spec = (frame.shape, frame.dtype)
+        if self._frame_spec is None:
+            self._frame_spec = spec
+        elif self._frame_spec != spec:
+            raise ValueError(f"frame {spec} does not match the server's "
+                             f"{self._frame_spec}")
+        shape, dtype = self._frame_spec
+        # compile the attach path too (fresh-carry + slot-write): the
+        # request plane attaches streams lazily, so an unwarmed first
+        # attach would land its compile in some client's frame latency.
+        # Writing into a FREE slot is harmless — its carry is masked
+        # dead weight until an attach overwrites it anyway.
+        if self._free:
+            self._carry = self._write_fn(
+                self._carry, jnp.asarray(self._free[0]),
+                self._fresh_fn(jax.random.key(0)))
+        if self.mesh is not None:
+            self._carry, outs = self._step_fn(
+                self._carry, jnp.zeros((self.capacity,) + shape, dtype),
+                jnp.zeros((self.capacity,), bool))
+            self._materialize_row((outs, 0))
+            return
+        for tier in self.tiers:
+            self._carry, outs = self._tier_fn(
+                self._carry, jnp.arange(tier, dtype=jnp.int32),
+                jnp.zeros((tier,) + shape, dtype),
+                jnp.zeros((tier,), bool))
+            # also warm the output-read path: row indexing compiles one
+            # gather executable per outs shape (i.e. per tier) on first
+            # use — ~200ms that would otherwise hit the first frames
+            self._materialize_row((outs, 0))
+
+    def latest(self, handle: SessionHandle) -> tuple | None:
+        """The most recent stepped frame's ``(estimate, ess,
+        log_marginal, resampled)`` for the session (host NumPy values),
+        or ``None`` if no frame has been stepped since attach/resume.
+
+        This is the streaming accessor the request plane
+        (``repro.serve.frontend``) resolves per-frame futures from: it
+        reads the last row without draining the queue or stacking the
+        whole history the way ``result`` does.
+        """
+        last = self._lookup(handle).last
+        return None if last is None else self._materialize_row(last)
 
     def result(self, handle: SessionHandle) -> filters.FilterResult:
         """Drain the session's queue and return its trajectory so far.
@@ -503,14 +671,14 @@ class ParticleSessionServer:
         polling costs O(new frames) in transfers (the returned
         full-history arrays are still O(T) memcpy)."""
         if sess.pending:
-            est, ess, log_z, res = zip(*sess.pending)
+            est, ess, log_z, res = zip(*(self._materialize_row(r)
+                                         for r in sess.pending))
             fresh = {
                 "estimates": jax.tree_util.tree_map(
-                    lambda *xs: np.stack([np.asarray(x) for x in xs]),
-                    *est),
-                "ess": np.stack([np.asarray(x) for x in ess]),
-                "log_marginal": np.stack([np.asarray(x) for x in log_z]),
-                "resampled": np.stack([np.asarray(x) for x in res]),
+                    lambda *xs: np.stack(xs), *est),
+                "ess": np.stack(ess),
+                "log_marginal": np.stack(log_z),
+                "resampled": np.stack(res),
             }
             sess.pending = []
             sess.stacked = fresh if sess.stacked is None else \

@@ -1,0 +1,274 @@
+"""The asyncio request plane (repro.serve.frontend): continuous
+batching, admission control, and backpressure over the resident bank.
+
+Contracts pinned here (DESIGN.md §15):
+
+* a stream served through the frontend — coalesced, parked, resumed,
+  whatever the scheduler did — produces bitwise the standalone
+  ``ParallelParticleFilter`` trajectory;
+* simultaneous arrivals coalesce into shared bank steps (batch
+  trigger), lone arrivals fire by the deadline trigger;
+* over-capacity admission parks sessions through ``checkpoint/store``
+  and resumes them on drain, bounded by ``park_patience``;
+* per-stream queues backpressure ``submit`` at ``max_queue``;
+* compile count stays bounded by the server's occupancy tiers.
+
+All tests are plain sync functions driving ``asyncio.run`` — no
+pytest-asyncio dependency.
+"""
+import asyncio
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SIRConfig, ParallelParticleFilter
+from repro.serve import (FrontendConfig, Metrics, ParticleFrontend,
+                         ParticleSessionServer)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tests", "golden"))
+try:
+    from generate_session import lg_model
+finally:
+    sys.path.pop(0)
+
+
+def frames(seed: int, k: int) -> np.ndarray:
+    return np.asarray(jax.random.normal(jax.random.key(seed), (k,)),
+                      np.float32) * 0.8
+
+
+def standalone(key, zs, n=64, ess_frac=0.5):
+    return ParallelParticleFilter(
+        model=lg_model(),
+        sir=SIRConfig(n_particles=n, ess_frac=ess_frac)).run(
+            key, np.asarray(zs))
+
+
+def make_server(capacity=4, n=64):
+    return ParticleSessionServer(
+        model=lg_model(), sir=SIRConfig(n_particles=n, ess_frac=0.5),
+        capacity=capacity)
+
+
+def assert_stream_matches_standalone(results, key, zs) -> None:
+    """Frontend per-frame results == the standalone filter, bitwise."""
+    ref = standalone(key, zs)
+    got_est = np.stack([r.estimate for r in results])
+    np.testing.assert_array_equal(got_est, np.asarray(ref.estimates))
+    np.testing.assert_array_equal(
+        np.asarray([r.log_marginal for r in results], np.float32),
+        np.asarray(ref.log_marginal))
+    np.testing.assert_array_equal(
+        np.asarray([r.resampled for r in results]),
+        np.asarray(ref.resampled))
+
+
+# ---------------------------------------------------------------------------
+# Correctness through the plane
+# ---------------------------------------------------------------------------
+
+def test_single_stream_parity_bitwise():
+    """One client, frames submitted one by one: the delivered FrameResult
+    stream is the standalone filter trajectory, bitwise."""
+    zs = frames(3, 12)
+    key = jax.random.key(5)
+
+    async def main():
+        async with ParticleFrontend(make_server()) as fe:
+            stream = await fe.open(key)
+            results = []
+            for z in zs:
+                results.append(await (await fe.submit(stream, z)))
+            await fe.close(stream)
+            return results
+
+    assert_stream_matches_standalone(asyncio.run(main()), key, zs)
+
+
+def test_interleaved_streams_parity_and_coalescing():
+    """Four concurrent clients: every stream stays bitwise-correct AND
+    simultaneous arrivals share bank steps (steps < total frames)."""
+    keys = [jax.random.key(10 + i) for i in range(4)]
+    zss = [frames(20 + i, 10) for i in range(4)]
+
+    async def main():
+        fe = ParticleFrontend(make_server(capacity=4),
+                              FrontendConfig(max_delay=0.05))
+        async with fe:
+            streams = [await fe.open(k) for k in keys]
+            futs = [[] for _ in streams]
+            for t in range(10):
+                for i, s in enumerate(streams):
+                    futs[i].append(await fe.submit(s, zss[i][t]))
+            results = [await asyncio.gather(*f) for f in futs]
+            snap = fe.snapshot()
+            return results, snap
+
+    results, snap = asyncio.run(main())
+    for res, key, zs in zip(results, keys, zss):
+        assert_stream_matches_standalone(res, key, zs)
+    assert snap["counters"]["frames"] == 40
+    assert snap["counters"]["steps"] < 40          # batching happened
+    assert snap["series"]["coalesce"]["mean"] > 1.0
+
+
+def test_deadline_trigger_fires_lone_arrival():
+    """With the batch trigger unreachable (3 live streams, 1 submitting),
+    the deadline trigger must deliver the lone frame ~max_delay later."""
+    async def main():
+        fe = ParticleFrontend(make_server(capacity=4),
+                              FrontendConfig(max_delay=0.02))
+        async with fe:
+            active = await fe.open(jax.random.key(0))
+            for i in range(2):
+                await fe.open(jax.random.key(1 + i))   # idle neighbours
+            res = await (await fe.submit(active, np.float32(0.3)))
+            return res
+
+    res = asyncio.run(main())
+    assert np.isfinite(res.log_marginal)
+    assert res.latency < 30.0                      # delivered, not stuck
+
+
+def test_metrics_latency_series_recorded():
+    async def main():
+        metrics = Metrics()
+        fe = ParticleFrontend(make_server(capacity=2), metrics=metrics)
+        async with fe:
+            s = await fe.open(jax.random.key(1))
+            for z in frames(9, 5):
+                await (await fe.submit(s, z))
+        return metrics.snapshot()
+
+    snap = asyncio.run(main())
+    assert snap["series"]["latency"]["count"] == 5
+    assert snap["series"]["latency"]["p50"] > 0
+    assert snap["counters"]["frames"] == 5
+
+
+# ---------------------------------------------------------------------------
+# Admission control: parking + resume (§15.3)
+# ---------------------------------------------------------------------------
+
+def test_over_capacity_parks_and_stays_bitwise(tmp_path):
+    """6 streams on a 2-slot bank: admission parks/resumes through the
+    checkpoint store, and a parked-and-resumed stream's trajectory is
+    STILL bitwise the standalone filter."""
+    keys = [jax.random.key(40 + i) for i in range(6)]
+    zss = [frames(50 + i, 8) for i in range(6)]
+
+    async def main():
+        fe = ParticleFrontend(
+            make_server(capacity=2),
+            FrontendConfig(max_delay=0.005, park_patience=0.01,
+                           park_dir=str(tmp_path)))
+        async with fe:
+            streams = [await fe.open(k) for k in keys]
+            futs = [[] for _ in streams]
+            for t in range(8):
+                for i, s in enumerate(streams):
+                    futs[i].append(await fe.submit(s, zss[i][t]))
+            results = [await asyncio.gather(*f) for f in futs]
+            return results, fe.snapshot()
+
+    results, snap = asyncio.run(main())
+    assert snap["counters"]["park_events"] > 0
+    assert snap["counters"]["resume_events"] > 0
+    for res, key, zs in zip(results, keys, zss):
+        assert_stream_matches_standalone(res, key, zs)
+    # the durable copies went through checkpoint/store
+    assert any(p.startswith("stream-") for p in os.listdir(tmp_path))
+
+
+def test_open_always_admits_over_capacity():
+    """open() never refuses: the 3rd stream on a 2-slot bank is admitted
+    (parked) and still gets served."""
+    async def main():
+        fe = ParticleFrontend(make_server(capacity=2),
+                              FrontendConfig(max_delay=0.005,
+                                             park_patience=0.01))
+        async with fe:
+            streams = [await fe.open(jax.random.key(i)) for i in range(3)]
+            outs = []
+            for s in streams:
+                outs.append(await (await fe.submit(s, np.float32(0.1))))
+            return outs
+
+    outs = asyncio.run(main())
+    assert len(outs) == 3
+    assert all(np.isfinite(o.log_marginal) for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# Backpressure + lifecycle
+# ---------------------------------------------------------------------------
+
+def test_submit_backpressures_at_max_queue():
+    """A client outpacing the bank blocks at max_queue in-flight frames
+    instead of growing the queue without bound."""
+    async def main():
+        fe = ParticleFrontend(make_server(capacity=1),
+                              FrontendConfig(max_queue=2, max_delay=0.001))
+        async with fe:
+            s = await fe.open(jax.random.key(0))
+            futs = [await fe.submit(s, z) for z in frames(8, 10)]
+            await asyncio.gather(*futs)
+            snap = fe.snapshot()
+            assert s.queue_depth == 0
+            return snap
+
+    snap = asyncio.run(main())
+    assert snap["counters"]["backpressure_waits"] > 0
+    assert snap["counters"]["frames"] == 10
+
+
+def test_submit_to_closed_stream_raises():
+    async def main():
+        async with ParticleFrontend(make_server(capacity=1)) as fe:
+            s = await fe.open(jax.random.key(0))
+            await fe.close(s)
+            with pytest.raises(ValueError, match="closed"):
+                await fe.submit(s, np.float32(0.0))
+
+    asyncio.run(main())
+
+
+def test_close_releases_slot_for_waiting_stream():
+    """Closing a resident stream hands its slot to a parked one."""
+    async def main():
+        fe = ParticleFrontend(make_server(capacity=1),
+                              FrontendConfig(max_delay=0.001,
+                                             park_patience=10.0))
+        async with fe:
+            a = await fe.open(jax.random.key(0))
+            await (await fe.submit(a, np.float32(0.2)))
+            b = await fe.open(jax.random.key(1))
+            fut = await fe.submit(b, np.float32(0.4))   # waits: a resident
+            await fe.close(a)                           # frees the slot
+            res = await asyncio.wait_for(fut, timeout=30)
+            return res
+
+    res = asyncio.run(main())
+    assert np.isfinite(res.log_marginal)
+
+
+def test_step_traces_bounded_by_tiers_through_frontend():
+    """The plane inherits the tiered compile bound: any traffic pattern
+    compiles at most len(server.tiers) step programs."""
+    async def main():
+        server = make_server(capacity=4)
+        fe = ParticleFrontend(server, FrontendConfig(max_delay=0.002))
+        async with fe:
+            streams = [await fe.open(jax.random.key(i)) for i in range(4)]
+            for t in range(6):                 # ragged traffic: tier churn
+                futs = [await fe.submit(s, np.float32(0.1))
+                        for s in streams[:1 + (t % 4)]]
+                await asyncio.gather(*futs)
+        return server
+
+    server = asyncio.run(main())
+    assert 1 <= server.step_traces <= len(server.tiers)
