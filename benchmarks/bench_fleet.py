@@ -1,0 +1,215 @@
+"""Fleet elasticity under skewed load → BENCH_fleet.json.
+
+What the fleet layer (``repro.serve.fleet``, DESIGN.md §16) buys over a
+single bank, measured the way its capacity planner needs:
+
+* ``configs``: a session-count sweep under **skewed Poisson** load
+  (every 4th stream submits at ``SKEW``× the base rate, and the even-
+  indexed half of the streams are short-lived — they close at 40% of
+  the run) for two fleets of equal total capacity: ``1bank`` (one
+  8-slot bank, no elasticity) and ``2bank`` (two 4-slot banks with the
+  controller rebalancing between them).  The churn is the point:
+  least-loaded admission alternates arrivals across banks, so the
+  short-lived streams drain one bank and pile the survivors' load on
+  the other — exactly the residency skew the rebalancer exists to
+  undo, live-migrating sessions until the gap closes.  Per-config
+  ``sessions_per_node`` is the largest swept count whose p99 stays
+  under ``SLO_MS``.
+* ``migration_cost``: what a live move costs the moved session —
+  frames stalled per migration (undelivered frames carried through the
+  handoff) and the suspend→adopt wall time — aggregated over every
+  migration the 2-bank sweep performed.
+
+Latency is recorded **client-side** (controller submit → future
+resolution), not frontend-side, so time a frame spends fenced behind a
+migration is charged to the fleet, not hidden.  As everywhere in
+``benchmarks/``, this 1-core container measures serialized work —
+ratios and knee points transfer, absolute numbers do not (DESIGN.md
+§10.5).  ``--smoke`` shrinks sizes and writes the gitignored
+``BENCH_fleet.smoke.json`` instead of the committed baseline.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEST = os.path.join(REPO, "BENCH_fleet.json")
+
+SLO_MS = 50.0          # target client-side p99 per frame
+RATE = 20.0            # base frames/s per stream
+SKEW = 4.0             # every 4th stream runs this much hotter
+CHURN_AT = 0.4         # even-indexed streams close at this run fraction
+TOTAL_CAPACITY = 8     # both fleet shapes get the same slot budget
+
+
+def _configs():
+    from repro.launch.registry import BankSpec
+
+    return {
+        "1bank": [BankSpec("a", TOTAL_CAPACITY)],
+        "2bank": [BankSpec("a", TOTAL_CAPACITY // 2),
+                  BankSpec("b", TOTAL_CAPACITY // 2)],
+    }
+
+
+def _make_factory(smoke: bool):
+    from benchmarks.bench_serve import _lg_model
+    from repro.core import SIRConfig
+    from repro.serve import ParticleSessionServer
+
+    n = 128 if smoke else 512
+
+    def make_server(spec):
+        return ParticleSessionServer(
+            model=_lg_model(), sir=SIRConfig(n_particles=n, ess_frac=0.5),
+            capacity=spec.capacity)
+
+    return make_server, n
+
+
+async def _client(fleet, idx: int, t_end: float, latencies: list) -> int:
+    """One open-loop stream: skewed-Poisson arrivals until ``t_end``
+    (the stream's own lifetime — short-lived streams get an earlier
+    one), client-side latency recorded per frame at future resolution."""
+    import jax
+    import numpy as np
+
+    rate = RATE * (SKEW if idx % 4 == 0 else 1.0)
+    rng = np.random.default_rng(2000 + idx)
+    fs = await fleet.open(jax.random.key(idx))
+    loop = asyncio.get_running_loop()
+    pending = []
+    while loop.time() < t_end:
+        await asyncio.sleep(rng.exponential(1.0 / rate))
+        if loop.time() >= t_end:
+            break
+        t0 = loop.time()
+        fut = await fleet.submit(fs, np.float32(rng.normal()))
+        fut.add_done_callback(
+            lambda f, t0=t0: latencies.append(loop.time() - t0))
+        pending.append(fut)
+    await asyncio.gather(*pending)
+    await fleet.close(fs)
+    return len(pending)
+
+
+def _run_fleet(label: str, specs, n_sessions: int, duration: float,
+               make_server) -> dict:
+    """Drive one fleet shape at one session count; returns the latency
+    summary (ms) + elasticity/migration counters."""
+    import numpy as np
+
+    from repro.launch.registry import FleetRegistry
+    from repro.serve import FleetConfig, FleetController, FrontendConfig
+
+    cfg = FleetConfig(
+        rebalance_interval=0.05, auto_scale=False,
+        frontend=FrontendConfig(max_delay=0.002, park_patience=0.05))
+    fleet = FleetController(make_server, FleetRegistry(list(specs)), cfg)
+    latencies: list = []
+
+    async def main():
+        async with fleet:
+            await fleet.warmup(np.float32(0.0))
+            now = asyncio.get_running_loop().time()
+            t0 = time.perf_counter()
+            # even-indexed streams are short-lived: their departure
+            # skews residency and puts the rebalancer to work
+            frames = await asyncio.gather(
+                *(_client(fleet, i,
+                          now + duration * (CHURN_AT if i % 2 == 0
+                                            else 1.0), latencies)
+                  for i in range(n_sessions)))
+            wall = time.perf_counter() - t0
+            return sum(frames), wall, fleet.snapshot()
+
+    frames, wall, snap = asyncio.run(main())
+    lat_ms = np.array(latencies) * 1e3 if latencies else np.zeros(1)
+    counters = snap["counters"]
+    stall = snap["series"].get("migration_stall_frames", {})
+    mig_ms = snap["series"].get("migration_ms", {})
+    return {
+        "config": label, "sessions": n_sessions,
+        "capacity": TOTAL_CAPACITY, "duration": duration,
+        "frames": frames, "frames_per_sec": frames / wall,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "migrations": counters.get("migrations", 0),
+        "scale_out_events": counters.get("scale_out_events", 0),
+        "stall_frames_mean": stall.get("mean", 0.0),
+        "migration_ms_p50": mig_ms.get("p50", 0.0),
+    }
+
+
+def run() -> list[dict]:
+    """benchmarks.run entry point — also writes BENCH_fleet.json
+    (``--smoke`` writes the gitignored .smoke sibling instead)."""
+    smoke = "--smoke" in sys.argv
+    duration = 1.5 if smoke else 5.0
+    counts = (4, 8) if smoke else (4, 8, 12)
+    make_server, n = _make_factory(smoke)
+
+    configs = {}
+    for label, specs in _configs().items():
+        sweep = [_run_fleet(label, specs, c, duration, make_server)
+                 for c in counts]
+        meeting = [r["sessions"] for r in sweep if r["p99_ms"] <= SLO_MS]
+        configs[label] = {"sweep": sweep,
+                          "sessions_per_node": max(meeting, default=0)}
+
+    two = configs["2bank"]["sweep"]
+    n_migrations = sum(r["migrations"] for r in two)
+    migration_cost = {
+        "migrations": n_migrations,
+        # frames stalled per migrated session: undelivered frames the
+        # handoff carried, averaged over every migration in the sweep
+        "stall_frames_per_migration": (
+            sum(r["stall_frames_mean"] * r["migrations"] for r in two)
+            / n_migrations if n_migrations else 0.0),
+        "migration_ms_p50": max(r["migration_ms_p50"] for r in two),
+    }
+
+    dest = DEST.replace(".json", ".smoke.json") if smoke else DEST
+    with open(dest, "w") as f:
+        json.dump({"smoke": smoke, "slo_ms": SLO_MS, "particles": n,
+                   "rate_per_stream": RATE, "skew": SKEW,
+                   "configs": configs, "migration_cost": migration_cost},
+                  f, indent=1)
+
+    rows = []
+    for label, cell in configs.items():
+        for r in cell["sweep"]:
+            rows.append({
+                "name": f"fleet/{label}_{r['sessions']}sessions_n{n}",
+                "us_per_call": r["p99_ms"] * 1e3,
+                "derived": (f"p99 @ {r['sessions']} sessions, "
+                            f"{r['frames_per_sec']:.0f} frames/s, "
+                            f"{r['migrations']} migrations"),
+            })
+        rows.append({
+            "name": f"fleet/{label}_sessions_per_node_n{n}",
+            "us_per_call": SLO_MS * 1e3,
+            "derived": (f"{cell['sessions_per_node']} sessions/node @ "
+                        f"p99 <= {SLO_MS:.0f} ms"),
+        })
+    rows.append({
+        "name": f"fleet/migration_cost_n{n}",
+        "us_per_call": migration_cost["migration_ms_p50"] * 1e3,
+        "derived": (f"{migration_cost['stall_frames_per_migration']:.2f} "
+                    f"frames stalled/migration over "
+                    f"{migration_cost['migrations']} migrations"),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    dest = DEST.replace(".json", ".smoke.json") if "--smoke" in sys.argv \
+        else DEST
+    print(f"wrote {dest}", file=sys.stderr)

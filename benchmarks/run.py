@@ -31,6 +31,9 @@ SUITES = {
     "latency": ("benchmarks.bench_latency",
                 "frontend load generator: Poisson/bursty arrival latency + "
                 "SLO capacity (BENCH_latency.json)"),
+    "fleet": ("benchmarks.bench_fleet",
+              "multi-bank fleet: 1-bank vs 2-bank-with-rebalancing under "
+              "skewed Poisson load + migration cost (BENCH_fleet.json)"),
     "ssm": ("benchmarks.bench_ssm",
             "generic-SSM model families: single filter vs FilterBank B=8 "
             "(BENCH_ssm.json)"),

@@ -1,4 +1,8 @@
-from repro.checkpoint.store import (latest_step, load_checkpoint,
-                                    save_checkpoint)
+"""Fault-tolerant checkpointing: atomic array checkpoints for filter /
+training state plus atomic JSON documents for control-plane snapshots
+(the fleet registry, DESIGN.md §6/§16.4)."""
+from repro.checkpoint.store import (latest_step, load_checkpoint, load_json,
+                                    save_checkpoint, save_json)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "save_json", "load_json"]

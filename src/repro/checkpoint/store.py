@@ -95,6 +95,34 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def save_json(directory: str, name: str, obj: Any) -> str:
+    """Atomically persist a JSON-serializable control-plane document.
+
+    The array store above carries *filter state*; fleet controllers also
+    need durable *metadata* — the bank registry, stream placements, the
+    per-stream checkpoint watermarks (DESIGN.md §16.4).  Same atomicity
+    discipline as ``save_checkpoint``: write to ``<name>.json.tmp``,
+    fsync, rename — a killed writer never leaves a torn document where
+    ``load_json`` would find it.  Returns the final path.
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, name + ".json")
+    tmp = final + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)     # atomicity boundary
+    return final
+
+
+def load_json(directory: str, name: str) -> Any:
+    """Read back a document written by ``save_json`` (raises
+    ``FileNotFoundError`` when it was never written)."""
+    with open(os.path.join(directory, name + ".json")) as f:
+        return json.load(f)
+
+
 def load_checkpoint(directory: str, step: int, like: Any,
                     shardings: Any = None) -> Any:
     """Restore a pytree with the structure of ``like``.

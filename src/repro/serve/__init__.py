@@ -1,9 +1,13 @@
 """Serving layer: batched LM generation, SMC particle decoding, the
-resident particle-filter session engine (``repro.serve.sessions``), and
-the asyncio request plane with continuous batching
-(``repro.serve.frontend``, DESIGN.md §15)."""
+resident particle-filter session engine (``repro.serve.sessions``), the
+asyncio request plane with continuous batching
+(``repro.serve.frontend``, DESIGN.md §15), and the multi-bank fleet
+controller with live migration and failure recovery
+(``repro.serve.fleet``, DESIGN.md §16)."""
 from repro.serve.engine import generate
-from repro.serve.frontend import (FrameResult, FrontendConfig,
+from repro.serve.fleet import (BankFailure, FleetConfig, FleetController,
+                               FleetStream)
+from repro.serve.frontend import (FrameResult, FrontendConfig, Handoff,
                                   ParticleFrontend, StreamHandle)
 from repro.serve.metrics import Metrics
 from repro.serve.sessions import (ParticleSessionServer, SessionHandle,
@@ -13,4 +17,5 @@ from repro.serve.smc_decode import SMCDecodeConfig, smc_decode
 __all__ = ["generate", "smc_decode", "SMCDecodeConfig",
            "ParticleSessionServer", "SessionHandle", "SuspendedSession",
            "ParticleFrontend", "FrontendConfig", "FrameResult",
-           "StreamHandle", "Metrics"]
+           "StreamHandle", "Handoff", "Metrics",
+           "FleetController", "FleetConfig", "FleetStream", "BankFailure"]

@@ -27,11 +27,21 @@ occupancy tier (DESIGN.md §15.2).  The control plane is:
   per-frame latency); ``snapshot()`` merges the server's tier-hit and
   trace counters.
 
-Threading contract: the frontend owns its server.  All server calls
-happen from the scheduler (bank steps and the surrounding bookkeeping
-run in a worker thread via ``run_in_executor``, one at a time), so the
-event loop keeps accepting submissions while the device computes —
-that overlap is what the continuous-batching latency win is made of.
+Threading contract: the frontend owns its server.  Bank steps and tier
+warmup run in ONE single-thread executor per frontend so the event
+loop keeps accepting submissions while the device computes — that
+overlap is what the continuous-batching latency win is made of.  Every
+*other* server call (attach/park/resume in the scheduler, suspend in
+``handoff``) happens synchronously on the loop thread in a no-awaits
+critical section entered only while no step is in flight: the server
+is not thread-safe, and jit buffer donation means a reader overlapping
+a step can observe a donated-away carry.
+
+Fleet hooks (DESIGN.md §16.2): ``handoff()`` quiesces a stream and
+extracts it — suspended filter state plus undelivered frames — as a
+``Handoff``; ``adopt()`` installs one on another frontend, resuming
+bit-for-bit.  ``repro.serve.fleet`` builds live migration and failure
+recovery out of exactly these two verbs.
 
 Lifecycle::
 
@@ -45,6 +55,7 @@ Lifecycle::
 from __future__ import annotations
 
 import asyncio
+import concurrent.futures
 import dataclasses
 import itertools
 import os
@@ -125,6 +136,7 @@ class StreamHandle:
         self._wait_since: float | None = None
         self._last_active = 0.0
         self._closed = False
+        self._migrating = False              # mid-handoff: scheduler hands off
         self._not_full = asyncio.Event()
         self._not_full.set()
 
@@ -139,6 +151,30 @@ class StreamHandle:
         return len(self._pending)
 
 
+@dataclasses.dataclass
+class Handoff:
+    """Portable state of one stream in transit between frontends.
+
+    Produced by ``ParticleFrontend.handoff`` (the drain side) and
+    consumed by ``ParticleFrontend.adopt`` (the adopting side) — the
+    currency of fleet-level session migration (DESIGN.md §16.2).  The
+    fleet controller also synthesizes one directly when it re-homes a
+    stream off a *dead* bank from that stream's durable checkpoint.
+
+    Attributes:
+      key: the stream's initial PRNG key — everything a fresh
+        (never-stepped) stream is.
+      suspended: host-side filter state through ``frames_done`` frames
+        (``None`` for a stream that never filtered a frame).
+      pending: undelivered ``(frame, future, t_arrive)`` work, in
+        submission order; the adopting frontend delivers these futures.
+    """
+
+    key: Array
+    suspended: sessions.SuspendedSession | None
+    pending: list
+
+
 class ParticleFrontend:
     """The asyncio request plane: continuous batching + admission control
     over one ``ParticleSessionServer`` (module docstring has the full
@@ -146,7 +182,8 @@ class ParticleFrontend:
 
     def __init__(self, server: sessions.ParticleSessionServer,
                  config: FrontendConfig | None = None,
-                 metrics: metrics_mod.Metrics | None = None):
+                 metrics: metrics_mod.Metrics | None = None,
+                 executor: concurrent.futures.Executor | None = None):
         self.server = server
         self.config = config or FrontendConfig()
         self.metrics = metrics or metrics_mod.Metrics()
@@ -158,6 +195,16 @@ class ParticleFrontend:
         self._task: asyncio.Task | None = None
         self._park_root = self.config.park_dir
         self._tmpdir: tempfile.TemporaryDirectory | None = None
+        # steps and warmup go through one single-thread executor; all
+        # other server calls stay on the loop thread between steps (the
+        # module-docstring threading contract).  The fleet controller
+        # passes a per-bank executor; otherwise the frontend owns one.
+        self._owns_executor = executor is None
+        self._executor = executor or concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="ppf-frontend")
+        self._stepping: set[int] = set()     # sids inside the running step
+        self._step_complete = asyncio.Event()
+        self.last_step_at: float | None = None   # loop-clock end of last step
 
     # -- lifecycle ----------------------------------------------------------
     async def start(self) -> None:
@@ -179,6 +226,8 @@ class ParticleFrontend:
         if self._tmpdir is not None:
             self._tmpdir.cleanup()
             self._tmpdir = None
+        if self._owns_executor:
+            self._executor.shutdown(wait=True)
 
     async def __aenter__(self) -> "ParticleFrontend":
         """``async with`` starts the scheduler..."""
@@ -254,7 +303,70 @@ class ParticleFrontend:
         (``server.warm_tiers``) so no client pays a compile on the hot
         path — call once before opening traffic."""
         await asyncio.get_running_loop().run_in_executor(
-            None, self.server.warm_tiers, example_frame)
+            self._executor, self.server.warm_tiers, example_frame)
+
+    # -- fleet handoff hooks (DESIGN.md §16.2) ------------------------------
+    async def handoff(self, stream: StreamHandle,
+                      directory: str | None = None) -> Handoff:
+        """Quiesce ``stream`` and extract it for adoption elsewhere.
+
+        The drain side of a live migration: the stream is first fenced
+        off from new scheduling (``_migrating``), then the call waits
+        for the bank to be between steps and suspends the session
+        through ``checkpoint/store`` *on the loop thread* — the same
+        no-awaits critical section the scheduler's own park/resume path
+        uses, so no server call ever overlaps a step's donated-buffer
+        window.  The stream is then removed from this frontend.
+        Undelivered frames travel inside the returned
+        ``Handoff`` — their futures are resolved by whichever frontend
+        ``adopt``\\ s them, so clients never observe the move except as
+        latency.  With ``directory`` the suspended state is also
+        persisted there (the controller's durable copy, what a chaos
+        kill recovers from).  The old handle is poisoned: further
+        ``submit`` calls raise ``ValueError`` so a racing producer
+        retries against the adopting frontend.
+        """
+        if stream.sid not in self._streams:
+            raise KeyError(f"unknown stream {stream.sid}")
+        stream._migrating = True
+        while self._stepping:                    # quiesce: bank between steps
+            await self._step_complete.wait()
+        # no awaits below until the handle is out of self._streams: the
+        # scheduler cannot interleave a step (donating the carry) or a
+        # park/resume with this suspend
+        sus = stream._sus
+        if stream._session is not None:
+            session = stream._session
+            stream._session = None
+            sus = self.server.suspend(session, directory=directory)
+        elif sus is not None and directory is not None:
+            sus.save(directory)
+        pending = list(stream._pending)
+        stream._pending = []
+        stream._closed = True                # poison: submits must re-route
+        stream._not_full.set()
+        del self._streams[stream.sid]
+        self._wake.set()
+        return Handoff(key=stream._key, suspended=sus, pending=pending)
+
+    async def adopt(self, handoff: Handoff) -> StreamHandle:
+        """Install a stream extracted by another frontend's ``handoff``.
+
+        The adopting side of a live migration: registers a fresh handle
+        whose suspended state resumes (bit-for-bit, the §11.4 contract)
+        on this frontend's server at the next scheduler pass, and whose
+        carried-over pending frames keep their original futures and
+        arrival times — latency accounting spans the migration.
+        """
+        stream = StreamHandle(next(self._sids), handoff.key)
+        stream._sus = handoff.suspended
+        stream._pending = list(handoff.pending)
+        if stream._pending:
+            stream._wait_since = asyncio.get_running_loop().time()
+            self._idle.clear()
+        self._streams[stream.sid] = stream
+        self._wake.set()
+        return stream
 
     def snapshot(self) -> dict:
         """Operational metrics + the server's tier/trace counters."""
@@ -289,9 +401,11 @@ class ParticleFrontend:
             self._reap_closed()
             self._rebalance(now)
             ready = [st for st in self._streams.values()
-                     if st.attached and st._pending and not st._closed]
+                     if st.attached and st._pending and not st._closed
+                     and not st._migrating]
             waiting = [st for st in self._streams.values()
-                       if not st.attached and st._pending and not st._closed]
+                       if not st.attached and st._pending and not st._closed
+                       and not st._migrating]
             if not ready:
                 if not waiting:
                     self._idle.set()
@@ -314,14 +428,27 @@ class ParticleFrontend:
             self.metrics.observe("queue_depth", sum(
                 st.queue_depth for st in self._streams.values()))
             self.metrics.observe("coalesce", len(work))
-            rows = await loop.run_in_executor(None, self._fire, work)
+            self._stepping = {st.sid for st, _, _, _ in work}
+            t_fire = loop.time()
+            try:
+                rows = await loop.run_in_executor(
+                    self._executor, self._fire, work)
+            finally:
+                self._stepping = set()
+                # wake handoff quiescers even when the step failed —
+                # the set-then-clear pulse releases every current waiter
+                self._step_complete.set()
+                self._step_complete.clear()
             done = loop.time()
+            self.last_step_at = done
             self.metrics.inc("steps")
+            self.metrics.observe("step_ms", (done - t_fire) * 1e3)
             for (st, _, fut, t_arrive), row in zip(work, rows):
                 st._last_active = done
                 latency = done - t_arrive
                 self.metrics.inc("frames")
                 self.metrics.observe("latency", latency)
+                self.metrics.observe("ess", row[1])
                 if not fut.done():
                     fut.set_result(FrameResult(
                         estimate=row[0], ess=row[1], log_marginal=row[2],
@@ -363,7 +490,7 @@ class ParticleFrontend:
         work has waited past ``park_patience``."""
         waiting = sorted((st for st in self._streams.values()
                           if not st.attached and st._pending
-                          and not st._closed),
+                          and not st._closed and not st._migrating),
                          key=lambda st: st._wait_since or now)
         for st in waiting:
             if self.server.occupancy < self.server.capacity:
@@ -381,7 +508,8 @@ class ParticleFrontend:
         for st in self._streams.values():
             if self.server.occupancy >= self.server.capacity:
                 break
-            if not st.attached and not st._closed and not st._pending:
+            if not st.attached and not st._closed and not st._pending \
+                    and not st._migrating:
                 self._give_slot(st, now)
 
     def _give_slot(self, st: StreamHandle, now: float) -> None:
@@ -399,7 +527,7 @@ class ParticleFrontend:
         ``require_idle`` only streams with no queued frames qualify (the
         no-thrash default until ``park_patience`` expires)."""
         candidates = [st for st in self._streams.values()
-                      if st.attached and not st._closed
+                      if st.attached and not st._closed and not st._migrating
                       and (not require_idle or not st._pending)]
         if not candidates:
             return None

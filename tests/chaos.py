@@ -1,0 +1,93 @@
+"""Deterministic fault injection for the serving fleet (tests only).
+
+The fleet's failure model (DESIGN.md §16.3) promises that a bank which
+*dies* (its step raises) or *hangs* (its step never returns) loses no
+sessions: the controller re-homes every affected stream from its
+durable checkpoint and replays the write-ahead frame log, bitwise.
+Testing that promise needs failures that are **deterministic** — same
+step, every run — which real faults never are.  This module injects
+them:
+
+* ``FailurePlan`` names the fault: kill (raise ``InjectedFailure``) or
+  hang (block until ``release`` is set, then raise) at the N-th bank
+  step call.
+* ``arm(server, plan)`` wraps one ``ParticleSessionServer.step`` with
+  the plan's call counter.  A kill is *persistent*: every step call at
+  or past the trigger raises, like a crashed worker that stays crashed.
+
+Usage (see ``tests/test_fleet.py``)::
+
+    plan = FailurePlan(kill_at_step=3)
+    def make_server(spec):
+        server = build(spec)
+        if spec.name == "doomed":
+            arm(server, plan)
+        return server
+
+Hang plans park the bank's worker thread on ``plan.release`` — a
+``threading.Event`` the test MUST set before tearing down (the worker
+threads are non-daemon; an unreleased hang would block interpreter
+exit).  Once released the call raises, so the hung step never
+half-completes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+
+class InjectedFailure(RuntimeError):
+    """The fault raised by an armed ``FailurePlan`` (never by real code
+    — asserting on this type proves the failure was the injected one)."""
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """One deterministic fault, scheduled by bank-step call index.
+
+    Attributes:
+      kill_at_step: raise ``InjectedFailure`` on every step call with
+        index >= this (``None`` = never kill).
+      hang_at_step: on step calls with index >= this, block on
+        ``release`` and then raise (``None`` = never hang).
+      release: the event a test sets to un-wedge a hung worker thread.
+      calls: step calls seen so far (the injection clock; also handy
+        for asserting the fault actually fired).
+    """
+
+    kill_at_step: int | None = None
+    hang_at_step: int | None = None
+    release: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+    calls: int = 0
+
+    @property
+    def fired(self) -> bool:
+        """Whether the scheduled fault has triggered at least once."""
+        trigger = min(t for t in (self.kill_at_step, self.hang_at_step)
+                      if t is not None)
+        return self.calls > trigger
+
+
+def arm(server, plan: FailurePlan) -> FailurePlan:
+    """Wrap ``server.step`` so it executes ``plan``; returns the plan.
+
+    The wrapper counts every step call (including replays through
+    ``suspend``'s queue drain) and injects the scheduled fault *before*
+    the real step runs — a killed step computes nothing, like a worker
+    that died before the collective.
+    """
+    real_step = server.step
+
+    def step(*args, **kwargs):
+        n = plan.calls
+        plan.calls += 1
+        if plan.kill_at_step is not None and n >= plan.kill_at_step:
+            raise InjectedFailure(f"injected kill at bank step call {n}")
+        if plan.hang_at_step is not None and n >= plan.hang_at_step:
+            plan.release.wait()
+            raise InjectedFailure(f"injected hang released at step call {n}")
+        return real_step(*args, **kwargs)
+
+    server.step = step
+    return plan

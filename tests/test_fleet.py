@@ -1,0 +1,443 @@
+"""Fleet controller (repro.serve.fleet) + registry/placement
+(repro.launch.registry): elasticity with a bitwise contract.
+
+Contracts pinned here (DESIGN.md §16):
+
+* placement policies are pure functions of ``BankView`` snapshots;
+  the registry round-trips durably through ``checkpoint.store``;
+* a stream served through the fleet — placed, migrated, rebalanced,
+  scaled, whatever the controller did — produces bitwise the standalone
+  ``ParallelParticleFilter`` trajectory (§16.2);
+* a bank killed or hung mid-stream loses ZERO sessions: every affected
+  stream is re-homed onto a surviving bank from its durable checkpoint
+  and its replayed trajectory stays bitwise (§16.3, via the
+  deterministic fault injection in ``tests/chaos.py``);
+* scale-in drains a bank through live migration, scale-out activates
+  standby capacity, and the rebalancer actually moves load.
+
+All tests are plain sync functions driving ``asyncio.run`` — no
+pytest-asyncio dependency.  The comprehensive chaos scenarios live in
+the slow lane; a small kill-recovery test stays in tier 1.
+"""
+import asyncio
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+import chaos
+from repro.core import SIRConfig, ParallelParticleFilter
+from repro.launch.registry import (BankSpec, BankView, CapacityTierAware,
+                                   FleetRegistry, LeastLoaded)
+from repro.serve import (FleetConfig, FleetController, FrontendConfig,
+                         ParticleSessionServer)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tests", "golden"))
+try:
+    from generate_session import lg_model
+finally:
+    sys.path.pop(0)
+
+N = 32   # particles: small keeps per-test compiles cheap
+
+
+def frames(seed: int, k: int) -> np.ndarray:
+    return np.asarray(jax.random.normal(jax.random.key(seed), (k,)),
+                      np.float32) * 0.8
+
+
+def standalone(key, zs):
+    return ParallelParticleFilter(
+        model=lg_model(), sir=SIRConfig(n_particles=N, ess_frac=0.5)).run(
+            key, np.asarray(zs))
+
+
+def server_factory(servers=None):
+    """A ``make_server`` factory; optionally records built servers by
+    bank name so tests can arm chaos plans on a specific bank."""
+    def make_server(spec):
+        server = ParticleSessionServer(
+            model=lg_model(), sir=SIRConfig(n_particles=N, ess_frac=0.5),
+            capacity=spec.capacity)
+        if servers is not None:
+            servers[spec.name] = server
+        return server
+    return make_server
+
+
+def fast_config(**overrides):
+    kw = dict(rebalance_interval=0.02, auto_scale=False,
+              frontend=FrontendConfig(max_delay=0.005, park_patience=0.02))
+    kw.update(overrides)
+    return FleetConfig(**kw)
+
+
+def assert_bitwise(results, key, zs) -> None:
+    """Fleet per-frame results == the standalone filter, bitwise."""
+    ref = standalone(key, zs)
+    np.testing.assert_array_equal(
+        np.stack([r.estimate for r in results]), np.asarray(ref.estimates))
+    np.testing.assert_array_equal(
+        np.asarray([r.log_marginal for r in results], np.float32),
+        np.asarray(ref.log_marginal))
+    np.testing.assert_array_equal(
+        np.asarray([r.resampled for r in results]),
+        np.asarray(ref.resampled))
+
+
+# ---------------------------------------------------------------------------
+# Registry + placement policies (pure control plane, no jit)
+# ---------------------------------------------------------------------------
+
+def test_bank_spec_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        BankSpec("a", capacity=0)
+    with pytest.raises(ValueError, match="name"):
+        BankSpec("", capacity=4)
+
+
+def test_registry_roundtrip_and_durability(tmp_path):
+    reg = FleetRegistry([BankSpec("a", 4), BankSpec("b", 8),
+                         BankSpec("spare", 4, standby=True)])
+    assert reg.names() == ["a", "b", "spare"]
+    assert [s.name for s in reg.active()] == ["a", "b"]
+    assert [s.name for s in reg.standbys()] == ["spare"]
+    assert reg.total_capacity() == 12
+    assert reg.total_capacity(include_standby=True) == 16
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(BankSpec("a", 2))
+
+    reg.save(str(tmp_path))
+    back = FleetRegistry.load(str(tmp_path))
+    assert back.names() == reg.names()
+    assert back.get("spare").standby
+    assert back.get("b").capacity == 8
+    assert "a" in back and "zz" not in back and len(back) == 3
+    assert back.remove("a").capacity == 4
+    assert len(back) == 2
+
+
+def view(name, capacity, live, queue=0, occ=None):
+    return BankView(name=name, capacity=capacity, live_streams=live,
+                    occupancy=min(live, capacity) if occ is None else occ,
+                    queue_depth=queue)
+
+
+def test_least_loaded_policy():
+    pol = LeastLoaded()
+    assert pol.choose([view("a", 4, 2), view("b", 4, 1)]) == "b"
+    # ties on load break by queue depth, then name
+    assert pol.choose([view("a", 4, 2, queue=5), view("b", 4, 2)]) == "b"
+    assert pol.choose([view("b", 4, 2), view("a", 4, 2)]) == "a"
+    with pytest.raises(ValueError, match="no live banks"):
+        pol.choose([])
+
+
+def test_capacity_tier_aware_policy():
+    pol = CapacityTierAware()
+    # packs the smallest bank that still has a free slot...
+    assert pol.choose([view("big", 8, 1), view("small", 2, 1)]) == "small"
+    # ...even when the big bank is emptier by pressure
+    assert pol.choose([view("big", 8, 0), view("small", 2, 1)]) == "small"
+    # all full -> least-loaded fallback
+    assert pol.choose([view("big", 8, 9), view("small", 2, 4)]) == "big"
+
+
+# ---------------------------------------------------------------------------
+# Parity through the fleet (§16.2)
+# ---------------------------------------------------------------------------
+
+def test_single_stream_parity_through_fleet():
+    """One stream through a 2-bank fleet: bitwise the standalone run."""
+    key, zs = jax.random.key(5), frames(3, 8)
+
+    async def main():
+        reg = FleetRegistry([BankSpec("a", 2), BankSpec("b", 2)])
+        async with FleetController(server_factory(), reg,
+                                   fast_config()) as fleet:
+            fs = await fleet.open(key)
+            futs = [await fleet.submit(fs, z) for z in zs]
+            results = await asyncio.gather(*futs)
+            await fleet.close(fs)
+            return results
+
+    assert_bitwise(asyncio.run(main()), key, zs)
+
+
+def test_migrate_mid_stream_bitwise():
+    """Manual live migration halfway through every stream: trajectories
+    stay bitwise and the controller accounts the move."""
+    keys = [jax.random.key(100 + i) for i in range(3)]
+    zss = [frames(200 + i, 10) for i in range(3)]
+
+    async def main():
+        reg = FleetRegistry([BankSpec("a", 2), BankSpec("b", 2)])
+        async with FleetController(server_factory(), reg,
+                                   fast_config()) as fleet:
+            streams = [await fleet.open(k) for k in keys]
+            futs = [[] for _ in streams]
+            for t in range(5):
+                for i, fs in enumerate(streams):
+                    futs[i].append(await fleet.submit(fs, zss[i][t]))
+            for fs in streams:                       # everyone moves house
+                await fleet.migrate(fs, "b" if fs.bank == "a" else "a")
+            for t in range(5, 10):
+                for i, fs in enumerate(streams):
+                    futs[i].append(await fleet.submit(fs, zss[i][t]))
+            results = [await asyncio.gather(*f) for f in futs]
+            snap = fleet.snapshot()
+            for fs in streams:
+                await fleet.close(fs)
+            return results, snap
+
+    results, snap = asyncio.run(main())
+    for res, key, zs in zip(results, keys, zss):
+        assert_bitwise(res, key, zs)
+    assert snap["counters"]["migrations"] == 3
+    assert snap["series"]["migration_ms"]["count"] == 3
+    # the suspend at each migration advanced the durable watermark
+    assert snap["series"]["migration_stall_frames"]["count"] == 3
+
+
+def test_rebalancer_moves_load_after_scale_out():
+    """4 streams piled on one 2-slot bank; scaling out a standby makes
+    the control loop migrate load onto it — bitwise throughout."""
+    keys = [jax.random.key(300 + i) for i in range(4)]
+    zss = [frames(400 + i, 8) for i in range(4)]
+
+    async def main():
+        reg = FleetRegistry([BankSpec("a", 2),
+                             BankSpec("spare", 2, standby=True)])
+        async with FleetController(server_factory(), reg,
+                                   fast_config()) as fleet:
+            streams = [await fleet.open(k) for k in keys]
+            assert all(fs.bank == "a" for fs in streams)
+            futs = [[] for _ in streams]
+            for t in range(4):
+                for i, fs in enumerate(streams):
+                    futs[i].append(await fleet.submit(fs, zss[i][t]))
+            await fleet.scale_out()                  # activates "spare"
+            deadline = asyncio.get_running_loop().time() + 20.0
+            while (fleet.metrics.counter("migrations") < 1
+                   and asyncio.get_running_loop().time() < deadline):
+                await asyncio.sleep(0.02)            # control-loop ticks
+            for t in range(4, 8):
+                for i, fs in enumerate(streams):
+                    futs[i].append(await fleet.submit(fs, zss[i][t]))
+            results = [await asyncio.gather(*f) for f in futs]
+            snap = fleet.snapshot()
+            placements = [fs.bank for fs in streams]
+            for fs in streams:
+                await fleet.close(fs)
+            return results, snap, placements
+
+    results, snap, placements = asyncio.run(main())
+    for res, key, zs in zip(results, keys, zss):
+        assert_bitwise(res, key, zs)
+    assert snap["counters"]["scale_out_events"] == 1
+    assert snap["counters"]["migrations"] >= 1
+    assert "spare" in placements                    # load actually moved
+
+
+def test_scale_in_drains_bitwise():
+    """Retiring a bank migrates its streams away live; the retired spec
+    returns to standby in the registry."""
+    keys = [jax.random.key(500 + i) for i in range(2)]
+    zss = [frames(600 + i, 8) for i in range(2)]
+
+    async def main():
+        reg = FleetRegistry([BankSpec("a", 2), BankSpec("b", 2)])
+        async with FleetController(server_factory(), reg,
+                                   fast_config()) as fleet:
+            streams = [await fleet.open(k) for k in keys]
+            futs = [[] for _ in streams]
+            for t in range(4):
+                for i, fs in enumerate(streams):
+                    futs[i].append(await fleet.submit(fs, zss[i][t]))
+            await fleet.scale_in("b")
+            assert all(fs.bank == "a" for fs in streams)
+            for t in range(4, 8):
+                for i, fs in enumerate(streams):
+                    futs[i].append(await fleet.submit(fs, zss[i][t]))
+            results = [await asyncio.gather(*f) for f in futs]
+            standby_names = [s.name for s in fleet.registry.standbys()]
+            for fs in streams:
+                await fleet.close(fs)
+            return results, standby_names
+
+    results, standby_names = asyncio.run(main())
+    for res, key, zs in zip(results, keys, zss):
+        assert_bitwise(res, key, zs)
+    assert standby_names == ["b"]
+
+
+def test_save_state_snapshot(tmp_path):
+    """The controller's durable snapshot (§16.4): registry + placements
+    round-trip through the checkpoint store's JSON documents."""
+    key, zs = jax.random.key(7), frames(11, 6)
+
+    async def main():
+        reg = FleetRegistry([BankSpec("a", 2), BankSpec("b", 2)])
+        cfg = fast_config(state_dir=str(tmp_path))
+        async with FleetController(server_factory(), reg, cfg) as fleet:
+            fs = await fleet.open(key)
+            futs = [await fleet.submit(fs, z) for z in zs]
+            await asyncio.gather(*futs)
+            await fleet.migrate(fs, "b" if fs.bank == "a" else "a")
+            fleet.save_state()
+            placed_on = fs.bank
+            await fleet.close(fs)
+            return fs.id, placed_on
+
+    fid, placed_on = asyncio.run(main())
+    reg, placements = FleetController.load_state(str(tmp_path))
+    assert set(reg.names()) == {"a", "b"}
+    row = placements["streams"][str(fid)]
+    assert row["bank"] == placed_on
+    assert row["ckpt_frames"] == 6                  # migration checkpointed
+    # ...and the durable filter state itself is on disk
+    assert os.path.isdir(tmp_path / f"stream-{fid}")
+
+
+# ---------------------------------------------------------------------------
+# Failure recovery (§16.3) — small kill case in tier 1, the rest slow
+# ---------------------------------------------------------------------------
+
+def test_kill_recovery_bitwise_small():
+    """A bank that dies mid-stream loses nothing: its stream is re-homed
+    on the survivor and replayed bitwise from the frame log."""
+    keys = [jax.random.key(700 + i) for i in range(2)]
+    zss = [frames(800 + i, 8) for i in range(2)]
+    plan = chaos.FailurePlan(kill_at_step=4)
+    servers = {}
+
+    async def main():
+        def make_server(spec):
+            server = server_factory(servers)(spec)
+            if spec.name == "a":
+                chaos.arm(server, plan)
+            return server
+
+        reg = FleetRegistry([BankSpec("a", 2), BankSpec("b", 2)])
+        async with FleetController(make_server, reg,
+                                   fast_config()) as fleet:
+            streams = [await fleet.open(k) for k in keys]
+            assert {fs.bank for fs in streams} == {"a", "b"}
+            futs = []
+            for fs, zs in zip(streams, zss):
+                futs.append([await fleet.submit(fs, z) for z in zs])
+            results = [await asyncio.gather(*f) for f in futs]
+            snap = fleet.snapshot()
+            placements = [fs.bank for fs in streams]
+            for fs in streams:
+                await fleet.close(fs)
+            return results, snap, placements
+
+    results, snap, placements = asyncio.run(main())
+    assert plan.fired                                # the kill happened
+    for res, key, zs in zip(results, keys, zss):
+        assert_bitwise(res, key, zs)                 # zero lost, bitwise
+    assert snap["counters"]["bank_failures"] == 1
+    assert snap["counters"]["sessions_recovered"] == 1
+    assert snap["banks"]["a"]["dead"] is True
+    assert all(b == "b" for b in placements)         # survivor took both
+
+
+@pytest.mark.slow
+def test_chaos_kill_bank_comprehensive():
+    """The headline chaos scenario: a bank with prior migrations (so
+    durable checkpoints exist) is killed under live traffic.  Every
+    affected session resumes elsewhere from its checkpoint + frame-log
+    replay, and EVERY stream stays bitwise the uninterrupted run."""
+    n_streams, n_frames = 4, 12
+    keys = [jax.random.key(900 + i) for i in range(n_streams)]
+    zss = [frames(1000 + i, n_frames) for i in range(n_streams)]
+    plan = chaos.FailurePlan()
+    servers = {}
+
+    async def main():
+        reg = FleetRegistry([BankSpec("a", 2), BankSpec("b", 2),
+                             BankSpec("spare", 4, standby=True)])
+        async with FleetController(server_factory(servers), reg,
+                                   fast_config()) as fleet:
+            streams = [await fleet.open(k) for k in keys]
+            futs = [[] for _ in streams]
+            for t in range(4):
+                for i, fs in enumerate(streams):
+                    futs[i].append(await fleet.submit(fs, zss[i][t]))
+            await asyncio.gather(*[f for fr in futs for f in fr])
+            # migrations write durable checkpoints (recovery's restore
+            # points), then the streams go home again
+            for fs in streams:
+                if fs.bank == "a":
+                    await fleet.migrate(fs, "b")
+                    await fleet.migrate(fs, "a")
+            on_a = [fs.id for fs in streams if fs.bank == "a"]
+            assert on_a                              # someone to lose
+            for t in range(4, n_frames):
+                for i, fs in enumerate(streams):
+                    futs[i].append(await fleet.submit(fs, zss[i][t]))
+            chaos.arm(servers["a"], plan)
+            plan.kill_at_step = 0                    # die on the next step
+            results = [await asyncio.gather(*f) for f in futs]
+            snap = fleet.snapshot()
+            recovered = [fs for fs in streams if fs.id in on_a]
+            assert all(fs.bank != "a" for fs in recovered)
+            assert all(fs.ckpt_frames >= 4 for fs in recovered)
+            for fs in streams:
+                await fleet.close(fs)
+            return results, snap, len(on_a)
+
+    results, snap, n_lost_home = asyncio.run(main())
+    assert plan.fired
+    for res, key, zs in zip(results, keys, zss):
+        assert len(res) == n_frames                  # zero sessions lost
+        assert_bitwise(res, key, zs)
+    assert snap["counters"]["bank_failures"] == 1
+    assert snap["counters"]["sessions_recovered"] == n_lost_home
+
+
+@pytest.mark.slow
+def test_chaos_hang_detected_and_recovered():
+    """A bank that silently stops delivering (step blocks forever) is
+    detected by the progress watchdog within ``fail_timeout`` and its
+    streams are re-homed — same zero-loss bitwise contract as a kill."""
+    keys = [jax.random.key(1100 + i) for i in range(2)]
+    zss = [frames(1200 + i, 8) for i in range(2)]
+    plan = chaos.FailurePlan()
+    servers = {}
+
+    async def main():
+        reg = FleetRegistry([BankSpec("a", 2), BankSpec("b", 2)])
+        cfg = fast_config(fail_timeout=0.5)
+        async with FleetController(server_factory(servers), reg,
+                                   cfg) as fleet:
+            await fleet.warmup(np.float32(0.0))      # no compile-time stalls
+            streams = [await fleet.open(k) for k in keys]
+            assert {fs.bank for fs in streams} == {"a", "b"}
+            chaos.arm(servers["a"], plan)
+            plan.hang_at_step = 0                    # wedge on next step
+            futs = []
+            for fs, zs in zip(streams, zss):
+                futs.append([await fleet.submit(fs, z) for z in zs])
+            try:
+                results = [await asyncio.gather(*f) for f in futs]
+            finally:
+                plan.release.set()                   # un-wedge the worker
+            snap = fleet.snapshot()
+            placements = [fs.bank for fs in streams]
+            for fs in streams:
+                await fleet.close(fs)
+            await asyncio.sleep(0.05)                # let the worker die
+            return results, snap, placements
+
+    results, snap, placements = asyncio.run(main())
+    assert plan.fired
+    for res, key, zs in zip(results, keys, zss):
+        assert_bitwise(res, key, zs)
+    assert snap["counters"]["bank_failures"] == 1    # watchdog, not a crash
+    assert snap["banks"]["a"]["dead"] is True
+    assert all(b == "b" for b in placements)

@@ -1,0 +1,154 @@
+"""Hypothesis fuzz for the request plane: randomized arrival / park /
+resume / migrate schedules (DESIGN.md §15/§16.2).
+
+Each example draws a bounded schedule — stream count, per-stream frame
+counts, an interleaved submit/migrate op sequence, and a bank capacity
+small enough to force parking — and drives it through TWO frontends
+(migrations handoff/adopt between them, each over its own server, so
+every move crosses a bank boundary like a fleet migration does).  The
+invariants, for every schedule the strategy can produce:
+
+* **bitwise parity**: each stream's delivered trajectory equals the
+  standalone ``ParallelParticleFilter`` run, no matter how the
+  scheduler coalesced, parked, resumed, or migrated it;
+* **no starved streams**: every submitted frame resolves (bounded
+  wait), even under ``max_queue`` backpressure and ``park_patience``
+  rotation;
+* **no slot leaks**: after every stream closes, both banks drain back
+  to occupancy zero (the servers are cached across examples, so a leak
+  in one example would poison the next — that is the point).
+
+Servers are cached per capacity so jit compiles are paid once per
+(bank, tier), not once per example.
+"""
+import asyncio
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the dev extra: pip install -e .[dev]")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import SIRConfig, ParallelParticleFilter  # noqa: E402
+from repro.serve import (FrontendConfig, ParticleFrontend,  # noqa: E402
+                         ParticleSessionServer)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tests", "golden"))
+try:
+    from generate_session import lg_model
+finally:
+    sys.path.pop(0)
+
+N = 32
+_SERVERS: dict = {}
+
+
+def cached_server(tag: str, capacity: int) -> ParticleSessionServer:
+    key = (tag, capacity)
+    if key not in _SERVERS:
+        _SERVERS[key] = ParticleSessionServer(
+            model=lg_model(), sir=SIRConfig(n_particles=N, ess_frac=0.5),
+            capacity=capacity)
+    return _SERVERS[key]
+
+
+def frames(seed: int, k: int) -> np.ndarray:
+    return np.asarray(jax.random.normal(jax.random.key(seed), (k,)),
+                      np.float32) * 0.8
+
+
+def standalone(key, zs):
+    return ParallelParticleFilter(
+        model=lg_model(), sir=SIRConfig(n_particles=N, ess_frac=0.5)).run(
+            key, np.asarray(zs))
+
+
+@st.composite
+def schedules(draw):
+    """(capacity, per-stream frame counts, interleaved op list, seed).
+
+    Ops are ``("submit", i)`` and ``("migrate", i)``; the interleaving
+    is drawn stream-by-stream so any submit order (and migrations at
+    any point, including before a stream's first frame and between a
+    backpressured burst) can occur.  Bounds keep one example under a
+    couple of bank steps' worth of work: ≤3 streams, ≤4 frames each,
+    capacity ≤2 (so 3 streams always exercises parking).
+    """
+    n_streams = draw(st.integers(1, 3))
+    capacity = draw(st.integers(1, 2))
+    counts = [draw(st.integers(1, 4)) for _ in range(n_streams)]
+    ops = []
+    remaining = list(counts)
+    if draw(st.booleans()):                      # sometimes migrate first
+        ops.append(("migrate", draw(st.integers(0, n_streams - 1))))
+    while any(remaining):
+        i = draw(st.sampled_from(
+            [j for j, r in enumerate(remaining) if r]))
+        ops.append(("submit", i))
+        remaining[i] -= 1
+        if draw(st.integers(0, 3)) == 0:         # ~25%: migrate someone
+            ops.append(("migrate", draw(st.integers(0, n_streams - 1))))
+    return capacity, counts, ops, draw(st.integers(0, 9999))
+
+
+async def drive(capacity, counts, ops, seed):
+    cfg = FrontendConfig(max_delay=0.002, max_queue=2, park_patience=0.01)
+    fe_a = ParticleFrontend(cached_server("a", capacity), cfg)
+    fe_b = ParticleFrontend(cached_server("b", capacity), cfg)
+    keys = [jax.random.key(seed * 13 + i) for i in range(len(counts))]
+    zss = [frames(seed * 17 + i, counts[i]) for i in range(len(counts))]
+    async with fe_a, fe_b:
+        where = {i: fe_a for i in range(len(counts))}
+        handles = {i: await fe_a.open(keys[i]) for i in range(len(counts))}
+        cursor = {i: 0 for i in range(len(counts))}
+        futs = {i: [] for i in range(len(counts))}
+        for op, i in ops:
+            if op == "submit":
+                t = cursor[i]
+                cursor[i] += 1
+                futs[i].append(await where[i].submit(handles[i], zss[i][t]))
+            else:
+                src = where[i]
+                dst = fe_b if src is fe_a else fe_a
+                handles[i] = await dst.adopt(await src.handoff(handles[i]))
+                where[i] = dst
+        results = {}
+        for i in futs:                            # no starved streams
+            results[i] = await asyncio.wait_for(
+                asyncio.gather(*futs[i]), timeout=120)
+        for i in handles:
+            await where[i].close(handles[i])
+        # closed streams are reaped on the next scheduler pass; a slot
+        # leak here would poison the cached server for the next example
+        deadline = asyncio.get_running_loop().time() + 30
+        while (cached_server("a", capacity).occupancy
+               or cached_server("b", capacity).occupancy):
+            assert asyncio.get_running_loop().time() < deadline, "slot leak"
+            await asyncio.sleep(0.005)
+    return results, zss, keys
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(schedules())
+def test_fuzzed_schedules_stay_bitwise(sched):
+    """Any bounded arrival/park/resume/migrate interleaving: bitwise
+    per-stream parity, every future resolves, no slot leaks."""
+    capacity, counts, ops, seed = sched
+    results, zss, keys = asyncio.run(drive(capacity, counts, ops, seed))
+    for i, res in results.items():
+        assert len(res) == counts[i]
+        ref = standalone(keys[i], zss[i])
+        np.testing.assert_array_equal(
+            np.stack([r.estimate for r in res]), np.asarray(ref.estimates))
+        np.testing.assert_array_equal(
+            np.asarray([r.log_marginal for r in res], np.float32),
+            np.asarray(ref.log_marginal))

@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Nightly slack-calibration sweep for the statistical gates.
+
+The Kalman-oracle gates (``tests/test_ssm_oracle.py``) run fixed seeds
+in CI — deterministic, so a slack that covers those seeds could still
+be drifting toward its edge on *other* seeds without anyone noticing.
+This sweep re-runs every gate across a seed sweep (fixed data per
+config, fresh run keys ``jax.random.key(5000 + s)``) and reports, per
+gate, the **required slack**: the value the configured slack would have
+to shrink to before that seed failed, as a fraction of the configured
+slack (``margin`` = err / bound; the gate fails at margin > 1).
+
+Output is a JSON calibration report (uploaded by the nightly workflow
+as ``gate_calibration.json``); exit status is 1 if ANY seed breaches
+its gate — i.e. the nightly lane turns "slack is quietly too tight"
+into a red run with the exact margins attached, instead of a flaky
+tier-1 failure three months later.
+
+Usage::
+
+    PYTHONPATH=src python tools/gate_sweep.py --seeds 16 --n 4096 \
+        --out gate_calibration.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tests"))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+import stats  # noqa: E402  (tests/stats.py)
+from test_ssm_oracle import (BIAS_SLACKS, CHAIN_BUDGET,  # noqa: E402
+                             CHAIN_SLACKS, N_STEPS, SEEDS, SLACKS)
+from repro.core import SIRConfig, run_sir  # noqa: E402
+from repro.models import ssm  # noqa: E402
+
+RUN_KEY_BASE = 5000  # keep distinct from the 1000/2000 calibration bases
+
+
+def _gate_rows(name: str, scheme: str, n_particles: int,
+               n_seeds: int) -> list[dict]:
+    """Run one (config, resampler) cell across the seed sweep; returns
+    one row per seed with the mean/log-marginal margins."""
+    model = ssm.oracle_configs()[name]
+    k_sim, _ = jax.random.split(jax.random.key(SEEDS[name]))
+    _, zs = ssm.simulate(k_sim, model, N_STEPS)  # FIXED data per config
+    zs = np.asarray(zs)
+    oracle = ssm.kalman_filter(model, zs)
+    lz_true = float(oracle.log_marginals.sum())
+    cfg = SIRConfig(n_particles=n_particles, resampler=scheme)
+
+    rows = []
+    for s in range(n_seeds):
+        _, outs = run_sir(jax.random.key(RUN_KEY_BASE + s), model, cfg, zs)
+        if scheme == "systematic":
+            mean_slack, lz_slack = SLACKS[name]
+            bound = stats.pf_mean_bound(oracle.covs, n_particles,
+                                        slack=mean_slack)
+            lz_bound = stats.log_marginal_bound(N_STEPS, n_particles,
+                                                slack=lz_slack)
+        else:
+            mean_slack, lz_slack = CHAIN_SLACKS[(name, scheme)]
+            skew = np.asarray(outs.diag["weight_skew"], np.float64)
+            bound = (stats.pf_mean_bound(oracle.covs, n_particles,
+                                         slack=mean_slack)
+                     + stats.chain_mean_bias(oracle.covs, skew,
+                                             CHAIN_BUDGET, BIAS_SLACKS[0]))
+            lz_bound = (stats.log_marginal_bound(N_STEPS, n_particles,
+                                                 slack=lz_slack)
+                        + stats.chain_log_marginal_bias(skew, CHAIN_BUDGET,
+                                                        BIAS_SLACKS[1]))
+        err = stats.rmse(outs.estimate, oracle.means)
+        lz_err = abs(float(np.asarray(outs.log_marginal,
+                                      np.float64).sum()) - lz_true)
+        rows.append({
+            "seed": RUN_KEY_BASE + s,
+            "mean_margin": float(err / bound),
+            "lz_margin": float(lz_err / lz_bound),
+        })
+    return rows
+
+
+def _summarize(rows: list[dict]) -> dict:
+    out = {}
+    for kind in ("mean_margin", "lz_margin"):
+        vals = np.array([r[kind] for r in rows])
+        out[kind] = {"max": float(vals.max()), "mean": float(vals.mean()),
+                     "argmax_seed": int(rows[int(vals.argmax())]["seed"])}
+    return out
+
+
+def run_sweep(n_seeds: int, n_particles: int) -> dict:
+    """The full report dict: per-gate seed rows + margin summaries."""
+    report = {"n_seeds": n_seeds, "n_particles": n_particles,
+              "run_key_base": RUN_KEY_BASE, "gates": {}}
+    for name in sorted(SEEDS):
+        for scheme in ("systematic", "metropolis", "rejection"):
+            rows = _gate_rows(name, scheme, n_particles, n_seeds)
+            report["gates"][f"{name}/{scheme}"] = {
+                "rows": rows, "summary": _summarize(rows)}
+    worst = max(v["summary"][k]["max"]
+                for v in report["gates"].values()
+                for k in ("mean_margin", "lz_margin"))
+    report["worst_margin"] = worst
+    report["ok"] = bool(worst <= 1.0)
+    return report
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("--seeds", type=int, default=16,
+                   help="seeds per gate (default 16)")
+    p.add_argument("--n", type=int, default=4096,
+                   help="particle count (default 4096, the tier-1 N)")
+    p.add_argument("--out", default="gate_calibration.json",
+                   help="report destination")
+    args = p.parse_args(argv)
+
+    report = run_sweep(args.seeds, args.n)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    for gate, cell in sorted(report["gates"].items()):
+        s = cell["summary"]
+        print(f"{gate:18s} mean-margin max {s['mean_margin']['max']:.3f} "
+              f"lz-margin max {s['lz_margin']['max']:.3f}")
+    print(f"worst margin {report['worst_margin']:.3f} "
+          f"({'OK' if report['ok'] else 'GATE BREACH'}) -> {args.out}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
