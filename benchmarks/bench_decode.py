@@ -1,0 +1,222 @@
+"""SMC decoding throughput → BENCH_decode.json.
+
+Measures the served-decoding tentpole (DESIGN.md §17) on the smoke LM:
+
+* ``particles``: tokens/s vs. K ∈ {4, 8, 16} hypotheses per prompt at
+  fixed batch — the cost of running decoding as a K-particle filter
+  rather than a single greedy stream.  Both the standalone
+  ``smc_decode`` scan and the session-hosted path (one
+  ``ParticleSessionServer`` session per prompt, frame-at-a-time) are
+  timed on the identical workload; ``session_overhead`` is the
+  host-loop tax the resident engine adds per decode step.
+* ``batch``: tokens/s vs. prompt-batch size B at fixed K — the bank
+  dimension's scaling.
+* ``resample_share``: fraction of decode-step wall-clock spent in the
+  resampling + ancestor-indexed KV-cache gather (the §V
+  compressed-particles exchange), measured as 1 − t(never resample) /
+  t(resample every step) at equal K/B — the same program with the ESS
+  trigger pinned to 0 or 1 via ``ess_frac``.
+
+Schema notes (also in README "Benchmarks"): every row carries raw
+``seconds`` plus derived tokens/s; ``tokens_per_sec`` counts emitted
+tokens (B · steps), ``particle_tokens_per_sec`` counts per-hypothesis
+work (B · K · steps).  On this 1-core CI container the numbers are
+serialized-work measurements (DESIGN.md §10.5).  ``--smoke`` shrinks
+sizes and writes the gitignored ``BENCH_decode.smoke.json`` instead of
+the committed baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEST = os.path.join(REPO, "BENCH_decode.json")
+
+ARCH = "qwen3-32b"
+PROMPT_LEN = 16
+
+
+def _setup():
+    import jax
+    from repro.configs import get_config
+    from repro.models.lm import model as M
+
+    cfg = get_config(ARCH, smoke=True)
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _standalone_seconds(params, cfg, prompt, dcfg) -> float:
+    """Warm-then-time one full ``smc_decode`` call (prefill + scan)."""
+    import jax
+    from repro.serve import smc_decode
+
+    key = jax.random.key(7)
+    jax.block_until_ready(
+        smc_decode(params, cfg, prompt, dcfg, key=key).sequences)
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        smc_decode(params, cfg, prompt, dcfg, key=key).sequences)
+    return time.perf_counter() - t0
+
+
+def _session_seconds(params, cfg, prompt, dcfg) -> float:
+    """Time the same decode hosted as per-prompt resident sessions.
+
+    A throwaway server instance runs the workload once first so the
+    tier program is compiled (the jit cache is process-global); the
+    timed pass then measures the steady serving loop, prefill included
+    — the fair comparison with the standalone call.
+    """
+    import jax
+    import numpy as np
+    from repro.serve import LMDecodeSSM, suspended_decode_session
+    from repro.serve.sessions import ParticleSessionServer
+
+    b = prompt.shape[0]
+    model = LMDecodeSSM(params=params, cfg=cfg, decode=dcfg,
+                        prompt_len=PROMPT_LEN)
+    keys = jax.random.split(jax.random.key(7), b)
+
+    def drive():
+        server = ParticleSessionServer(model=model, sir=dcfg.sir(),
+                                       capacity=b)
+        handles = [server.resume(suspended_decode_session(
+            model, keys[i], prompt[i])) for i in range(b)]
+        for t in range(1, dcfg.steps):
+            for h in handles:
+                server.submit(h, np.float32(t))
+            server.step()
+        jax.block_until_ready(server._carry)    # noqa: SLF001
+
+    drive()                                      # compile the tier program
+    t0 = time.perf_counter()
+    drive()
+    return time.perf_counter() - t0
+
+
+def particle_sweep(smoke: bool) -> list[dict]:
+    """tokens/s vs. K, standalone AND session-hosted."""
+    import jax
+    from repro.serve import SMCDecodeConfig
+
+    cfg, params = _setup()
+    b = 2 if smoke else 4
+    steps = 6 if smoke else 32
+    prompt = jax.random.randint(jax.random.key(1), (b, PROMPT_LEN), 0,
+                                cfg.vocab_size)
+    rows = []
+    for k in (4, 8, 16):
+        dcfg = SMCDecodeConfig(n_particles=k, steps=steps,
+                               proposal_temperature=1.5, ess_frac=0.5)
+        dt = _standalone_seconds(params, cfg, prompt, dcfg)
+        dt_s = _session_seconds(params, cfg, prompt, dcfg)
+        rows.append({
+            "n_particles": k, "batch": b, "steps": steps,
+            "standalone_seconds": dt,
+            "session_seconds": dt_s,
+            "tokens_per_sec": b * steps / dt,
+            "particle_tokens_per_sec": b * k * steps / dt,
+            "session_tokens_per_sec": b * steps / dt_s,
+            "session_overhead": dt_s / dt - 1.0,
+        })
+    return rows
+
+
+def batch_sweep(smoke: bool) -> list[dict]:
+    """tokens/s vs. prompt-batch size at fixed K."""
+    import jax
+    from repro.serve import SMCDecodeConfig
+
+    cfg, params = _setup()
+    steps = 6 if smoke else 32
+    k = 8
+    rows = []
+    for b in ((1, 2) if smoke else (1, 2, 4, 8)):
+        prompt = jax.random.randint(jax.random.key(1), (b, PROMPT_LEN), 0,
+                                    cfg.vocab_size)
+        dcfg = SMCDecodeConfig(n_particles=k, steps=steps,
+                               proposal_temperature=1.5, ess_frac=0.5)
+        dt = _standalone_seconds(params, cfg, prompt, dcfg)
+        rows.append({
+            "n_particles": k, "batch": b, "steps": steps,
+            "standalone_seconds": dt,
+            "tokens_per_sec": b * steps / dt,
+            "particle_tokens_per_sec": b * k * steps / dt,
+        })
+    return rows
+
+
+def resample_share(smoke: bool) -> list[dict]:
+    """Decode-step share of resampling + cache gather: the ESS trigger
+    pinned always-on (ess_frac=1, τ≠1 keeps ESS < K) vs. never
+    (ess_frac=0) on the same program."""
+    import jax
+    from repro.serve import SMCDecodeConfig
+
+    cfg, params = _setup()
+    b = 2 if smoke else 4
+    steps = 6 if smoke else 32
+    prompt = jax.random.randint(jax.random.key(1), (b, PROMPT_LEN), 0,
+                                cfg.vocab_size)
+    rows = []
+    for k in (4, 16):
+        base = dict(n_particles=k, steps=steps, proposal_temperature=1.5)
+        dt_never = _standalone_seconds(
+            params, cfg, prompt, SMCDecodeConfig(ess_frac=0.0, **base))
+        dt_always = _standalone_seconds(
+            params, cfg, prompt, SMCDecodeConfig(ess_frac=1.0, **base))
+        rows.append({
+            "n_particles": k, "batch": b, "steps": steps,
+            "never_seconds": dt_never,
+            "always_seconds": dt_always,
+            "resample_gather_share": max(0.0, 1.0 - dt_never / dt_always),
+        })
+    return rows
+
+
+def run() -> list[dict]:
+    """benchmarks.run entry point — also writes BENCH_decode.json
+    (``--smoke`` writes the gitignored .smoke sibling instead)."""
+    smoke = "--smoke" in sys.argv
+    particles = particle_sweep(smoke)
+    batches = batch_sweep(smoke)
+    shares = resample_share(smoke)
+    dest = DEST.replace(".json", ".smoke.json") if smoke else DEST
+    with open(dest, "w") as f:
+        json.dump({"smoke": smoke, "arch": ARCH, "prompt_len": PROMPT_LEN,
+                   "particles": particles, "batch": batches,
+                   "resample_share": shares}, f, indent=1)
+    rows = []
+    for r in particles:
+        rows.append({
+            "name": f"decode/K{r['n_particles']}_B{r['batch']}",
+            "us_per_call": r["standalone_seconds"] / r["steps"] * 1e6,
+            "derived": (f"{r['tokens_per_sec']:.0f} tok/s standalone, "
+                        f"{r['session_tokens_per_sec']:.0f} tok/s hosted "
+                        f"({r['session_overhead'] * 100:+.0f}%)"),
+        })
+    for r in batches:
+        rows.append({
+            "name": f"decode/B{r['batch']}_K{r['n_particles']}",
+            "us_per_call": r["standalone_seconds"] / r["steps"] * 1e6,
+            "derived": (f"{r['tokens_per_sec']:.0f} tok/s, "
+                        f"{r['particle_tokens_per_sec']:.0f} ptok/s"),
+        })
+    for r in shares:
+        rows.append({
+            "name": f"decode/resample_share_K{r['n_particles']}",
+            "us_per_call": r["always_seconds"] / r["steps"] * 1e6,
+            "derived": (f"{r['resample_gather_share'] * 100:.0f}% of step "
+                        "in resample+gather"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")

@@ -34,6 +34,9 @@ SUITES = {
     "fleet": ("benchmarks.bench_fleet",
               "multi-bank fleet: 1-bank vs 2-bank-with-rebalancing under "
               "skewed Poisson load + migration cost (BENCH_fleet.json)"),
+    "decode": ("benchmarks.bench_decode",
+               "SMC decoding: tokens/s vs K and B, session-hosted vs "
+               "standalone, resample/gather share (BENCH_decode.json)"),
     "ssm": ("benchmarks.bench_ssm",
             "generic-SSM model families: single filter vs FilterBank B=8 "
             "(BENCH_ssm.json)"),

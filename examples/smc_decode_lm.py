@@ -35,15 +35,16 @@ def main() -> None:
 
     smc = SMCDecodeConfig(n_particles=args.particles, steps=args.steps,
                           proposal_temperature=args.tau)
-    seqs, lw, log_z, ess = smc_decode(params, cfg, prompt, smc,
-                                      key=jax.random.key(2))
-    print(f"SMC decode: {seqs.shape} (B, K, steps)")
-    print(f"per-prompt log-normalizer estimates: {log_z}")
+    res = smc_decode(params, cfg, prompt, smc, key=jax.random.key(2))
+    print(f"SMC decode: {res.sequences.shape} (B, K, steps)")
+    print(f"per-prompt log-normalizer estimates: {res.log_z}")
     print(f"final particle weights (prompt 0): "
-          f"{jnp.round(jax.nn.softmax(lw[0]), 3)}")
-    print(f"mean ESS across steps: {float(ess.mean()):.2f} / "
+          f"{jnp.round(jax.nn.softmax(res.log_weights[0]), 3)}")
+    print(f"mean ESS across steps: {float(res.ess.mean()):.2f} / "
           f"{args.particles}")
-    best = jnp.argmax(lw, axis=-1)
+    print(f"resample events: {int(res.resampled.sum())} / "
+          f"{res.resampled.size}")
+    best = jnp.argmax(res.log_weights, axis=-1)
     print(f"best hypothesis per prompt: {best}")
 
     greedy = generate(params, cfg, prompt, steps=args.steps)

@@ -41,6 +41,7 @@ class FilterResult(NamedTuple):
     ess: Array           # (K,)
     log_marginal: Array  # (K,) per-frame increments
     resampled: Array     # (K,)
+    ancestors: Array     # (K, N) when SIRConfig.record_ancestry, else (K, 0)
     diag: dict           # stacked DRA diagnostics
     final: particles.ParticleEnsemble  # ensemble at the last frame
 
@@ -96,7 +97,8 @@ class ParallelParticleFilter:
     def _run_local(self, key: Array, observations: Any) -> FilterResult:
         carry, outs = smc.run_sir(key, self.model, self.sir, observations)
         return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
-                            outs.resampled, outs.diag, carry.ensemble)
+                            outs.resampled, outs.ancestors, outs.diag,
+                            carry.ensemble)
 
     # -- distributed -------------------------------------------------------
     def _run_sharded(self, key: Array, observations: Any) -> FilterResult:
@@ -134,14 +136,14 @@ class ParallelParticleFilter:
                 in_specs=(P(), obs_spec),
                 out_specs=(
                     smc.StepOutput(estimate=P(), ess=P(), log_marginal=P(),
-                                   resampled=P(), diag=P()),
+                                   resampled=P(), ancestors=P(), diag=P()),
                     spec_particles,
                 ),
             )
             self._jit_sharded = jax.jit(fn)
         outs, final = self._jit_sharded(key, observations)
         return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
-                            outs.resampled, outs.diag, final)
+                            outs.resampled, outs.ancestors, outs.diag, final)
 
 
 @dataclasses.dataclass
@@ -219,7 +221,7 @@ class FilterBank:
             self._jit_local = jax.jit(scan_fn)
         outs, final = self._jit_local(keys, observations)
         return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
-                            outs.resampled, outs.diag, final)
+                            outs.resampled, outs.ancestors, outs.diag, final)
 
     def _run_sharded(self, keys: Array, observations: Any) -> FilterResult:
         mesh = self.mesh
@@ -259,14 +261,15 @@ class FilterBank:
                 out_specs=(
                     smc.StepOutput(estimate=bank, ess=bank,
                                    log_marginal=bank,
-                                   resampled=bank, diag=bank),
+                                   resampled=bank, ancestors=bank,
+                                   diag=bank),
                     spec_particles,
                 ),
             )
             self._jit_sharded = jax.jit(fn)
         outs, final = self._jit_sharded(keys, observations)
         return FilterResult(outs.estimate, outs.ess, outs.log_marginal,
-                            outs.resampled, outs.diag, final)
+                            outs.resampled, outs.ancestors, outs.diag, final)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,187 @@
+"""Ancestral genealogy: trajectory reconstruction and particle smoothing
+(DESIGN.md §17).
+
+A SIR run with ``SIRConfig(record_ancestry=True)`` emits, per frame ``t``:
+
+* ``ancestors[t]`` — ``(N,)`` int: post-step slot ``j`` was copied from
+  pre-resample particle ``ancestors[t][j]`` (the identity permutation on
+  frames whose ESS trigger did not fire, by the ``ess_resample``
+  contract);
+* ``diag["emission"][t]`` — the per-particle emission pytree snapshotted
+  *before* the resampling gather, so ``emissions[t]`` is indexed by the
+  same pre-resample slots ``ancestors[t]`` points at;
+* ``diag["log_weights"][t]`` — the normalized post-reweight log-weights
+  (pre-reset), i.e. the filtering weights attached to ``emissions[t]``.
+
+Everything in this module is pure index algebra on those three stacks —
+it never touches the model.  Two lineage conventions appear below:
+
+* the *trajectory* walk (``ancestral_lineage``): follow the final
+  **post**-resample slots backward.  Row ``t`` then indexes which
+  emission each surviving slot carries at frame ``t`` — exactly the
+  paths a resample-gathered in-state history buffer materializes, which
+  is what makes ``reconstruct_trajectories`` the coherence oracle for
+  ``smc_decode`` sequences.
+* the *smoothing* walk (``smoothing_lineage``): follow the final
+  **pre**-resample particles backward, so the terminal filtering weights
+  ``diag["log_weights"][-1]`` pair with the walked paths.  Weighting
+  those paths is the genealogy filter-smoother (Kitagawa 1996) —
+  asymptotically the marginal smoothing expectation E[x_t | z_{1:T}],
+  verified against the float64 ``kalman_smoother`` oracle in
+  ``tests/test_genealogy.py``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _walk_back(ancestors: Array, rows_last: Array) -> Array:
+    """Backward index walk.  ``ancestors`` is ``(T, N)``; returns the
+    ``(T, N)`` row stack with ``rows[T-1] = ancestors[T-1][rows_last]``
+    and ``rows[t] = ancestors[t][rows[t+1]]``."""
+
+    def back(idx, anc):
+        idx = jnp.take(anc, idx, axis=0)
+        return idx, idx
+
+    _, rows = jax.lax.scan(back, rows_last, ancestors, reverse=True)
+    return rows
+
+
+def ancestral_lineage(ancestors: Array) -> Array:
+    """Lineage rows of the final *post*-resample slots.
+
+    ``rows[t][j]`` is the pre-resample index at frame ``t`` of the
+    trajectory that survives in post-resample slot ``j`` after the last
+    frame: ``rows[T-1] = ancestors[T-1]`` and
+    ``rows[t] = ancestors[t][rows[t+1]]``.
+
+    Args:
+      ancestors: ``(T, N)`` recorded ancestor indices.
+    Returns:
+      ``(T, N)`` int32 rows indexing into each frame's emissions.
+    """
+    t_steps, n = ancestors.shape
+    return _walk_back(ancestors, jnp.arange(n, dtype=ancestors.dtype))
+
+
+def smoothing_lineage(ancestors: Array) -> Array:
+    """Lineage rows of the final *pre*-resample particles.
+
+    ``rows[T-1]`` is the identity — path ``i`` ends at the particle the
+    terminal filtering weight ``log_weights[T-1][i]`` belongs to — and
+    ``rows[t] = ancestors[t][rows[t+1]]`` for ``t < T-1``.  This is the
+    pairing the filter-smoother needs; contrast ``ancestral_lineage``.
+    """
+    t_steps, n = ancestors.shape
+    ident = jnp.arange(n, dtype=ancestors.dtype)
+    if t_steps == 1:
+        return ident[None]
+    # frame T-1's pre-resample particle i descends through ancestors[T-2],
+    # ..., ancestors[0]; ancestors[T-1] (the final commit) is not crossed.
+    rows = _walk_back(ancestors[:-1], ident)
+    return jnp.concatenate([rows, ident[None]], axis=0)
+
+
+def reconstruct_trajectories(ancestors: Array, emissions: Any) -> Any:
+    """Materialize the surviving root-to-leaf trajectories.
+
+    Args:
+      ancestors: ``(T, N)`` recorded ancestor indices.
+      emissions: pytree with ``(T, N, ...)`` leaves
+        (``FilterResult.diag["emission"]``).
+    Returns:
+      pytree with ``(N, T, ...)`` leaves: leaf ``[j, t]`` is the frame-t
+      emission of the trajectory surviving in final post-resample slot
+      ``j`` — bit-identical to what a resample-gathered in-state history
+      buffer holds at the end of the run.
+    """
+    rows = ancestral_lineage(ancestors)
+    gather = jax.vmap(lambda e_t, r: jnp.take(e_t, r, axis=0))
+    return jax.tree_util.tree_map(
+        lambda e: jnp.moveaxis(gather(e, rows), 0, 1), emissions)
+
+
+def _path_mean(rows: Array, emissions: Any, log_weights: Array) -> Any:
+    """Weighted mean over lineage paths: ``Σ_i w_i · e[t][rows[t][i]]``
+    per frame, with ``w = softmax(log_weights)``."""
+    n = rows.shape[1]
+    w = jnp.exp(log_weights - jax.scipy.special.logsumexp(log_weights))
+
+    def mean(e):
+        g = jax.vmap(lambda e_t, r: jnp.take(e_t, r, axis=0))(e, rows)
+        wx = w.reshape((1, n) + (1,) * (g.ndim - 2)).astype(g.dtype)
+        return jnp.sum(wx * g, axis=1)
+
+    return jax.tree_util.tree_map(mean, emissions)
+
+
+def filter_smoother_mean(ancestors: Array, emissions: Any,
+                         last_log_weights: Array) -> Any:
+    """Genealogy filter-smoother: E[x_t | z_{1:T}] estimates for all t.
+
+    Weights each surviving path by its terminal filtering weight
+    (Kitagawa's smoother-by-genealogy): path ``i`` follows
+    ``smoothing_lineage`` back from pre-resample particle ``i`` at the
+    last frame, weighted by ``softmax(last_log_weights)[i]``.  Exact in
+    the N → ∞ limit; at finite N early frames degrade with path
+    degeneracy (few distinct roots survive T resampling passes), which
+    is why ``fixed_lag_smoother_mean`` exists.
+
+    Args:
+      ancestors: ``(T, N)`` recorded ancestor indices.
+      emissions: pytree with ``(T, N, ...)`` leaves.
+      last_log_weights: ``(N,)`` final-frame normalized log-weights
+        (``FilterResult.diag["log_weights"][-1]``).
+    Returns:
+      pytree with ``(T, ...)`` leaves of smoothed means.
+    """
+    return _path_mean(smoothing_lineage(ancestors), emissions,
+                      last_log_weights)
+
+
+def fixed_lag_smoother_mean(ancestors: Array, emissions: Any,
+                            log_weights: Array, lag: int) -> Any:
+    """Fixed-lag smoothing: E[x_t | z_{1:min(t+lag, T)}] per frame.
+
+    For each frame ``t`` the paths are walked back only from frame
+    ``s = min(t + lag, T-1)`` and weighted by frame ``s``'s filtering
+    weights — the standard bias/variance compromise: a window long
+    enough to absorb future evidence, short enough that path degeneracy
+    cannot collapse it.  ``lag=0`` reproduces the filtering means;
+    ``lag >= T-1`` reproduces ``filter_smoother_mean``.
+
+    Args:
+      ancestors: ``(T, N)`` recorded ancestor indices.
+      emissions: pytree with ``(T, N, ...)`` leaves.
+      log_weights: ``(T, N)`` per-frame normalized log-weights
+        (``FilterResult.diag["log_weights"]``).
+      lag: smoothing window length (non-negative).
+    Returns:
+      pytree with ``(T, ...)`` leaves of lag-smoothed means.
+    """
+    if lag < 0:
+        raise ValueError(f"lag must be non-negative, got {lag}")
+    t_steps, n = ancestors.shape
+    per_frame = []
+    for t in range(t_steps):
+        s = min(t + lag, t_steps - 1)
+        idx = jnp.arange(n, dtype=ancestors.dtype)
+        # pre-resample particles at frame u descend through ancestors[u-1]
+        for u in range(s, t, -1):
+            idx = jnp.take(ancestors[u - 1], idx, axis=0)
+        w = jnp.exp(log_weights[s]
+                    - jax.scipy.special.logsumexp(log_weights[s]))
+
+        def mean(e, idx=idx, w=w):
+            g = jnp.take(e[t], idx, axis=0)
+            wx = w.reshape((n,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+            return jnp.sum(wx * g, axis=0)
+
+        per_frame.append(jax.tree_util.tree_map(mean, emissions))
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_frame)

@@ -114,11 +114,20 @@ class SIRConfig:
         ``repro.kernels.sir_fused`` — one normalization shared by every
         statistic, ancestors without the counts round-trip, and the
         Pallas megakernel on TPU (DESIGN.md §13).  Configs a fused step
-        cannot honor (a comb-only resampler, the per-shard DRA step)
-        fall back to the composed path automatically.
+        cannot honor (a comb-only resampler, the per-shard DRA step,
+        ancestry recording, an ``estimate_state`` model hook) fall back
+        to the composed path automatically.
       fused_backend: optional override of the fused execution backend
         (``"pallas"`` / ``"interpret"`` / ``"xla"``); ``None`` resolves
         from the platform like the rest of the kernel layer.
+      record_ancestry: emit the per-step ancestor indices in
+        ``StepOutput.ancestors`` plus the genealogy diagnostics
+        (``diag["emission"]`` — the model's per-particle emission before
+        the resampling gather — and ``diag["log_weights"]`` — the
+        normalized post-reweight weights) that
+        ``repro.core.genealogy`` consumes for trajectory reconstruction
+        and smoothing (DESIGN.md §17).  Off by default: recording costs
+        O(N) per frame in the scanned outputs.
     """
 
     n_particles: int = 4096
@@ -127,6 +136,7 @@ class SIRConfig:
     always_resample: bool = False
     step_backend: str = "composed"  # "composed" | "fused" (DESIGN.md §13.1)
     fused_backend: str | None = None
+    record_ancestry: bool = False   # genealogy layer (DESIGN.md §17)
 
 
 class SIRCarry(NamedTuple):
@@ -145,6 +155,7 @@ class StepOutput(NamedTuple):
     ess: Array           # global effective sample size
     log_marginal: Array  # running log p(Z^k) increment
     resampled: Array     # bool
+    ancestors: Array     # (N,) ancestor indices when recording, else (0,)
     diag: dict           # DRA diagnostics (links, overflow, q, ...)
 
 
@@ -155,6 +166,13 @@ class ResampleDecision(NamedTuple):
     ess: Array           # N_eff before resampling
     log_z: Array         # logsumexp of the incoming weights
     resampled: Array     # bool
+
+
+def no_ancestors() -> Array:
+    """The ``StepOutput.ancestors`` placeholder when ancestry recording
+    is off: a width-0 int32 vector, so the field stacks/vmaps/masks like
+    any other leaf without reserving O(N) per frame."""
+    return jnp.zeros((0,), jnp.int32)
 
 
 def ess_resample(key: Array, log_weights: Array, *, ess_frac: float,
@@ -199,9 +217,25 @@ def make_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig):
     stream split, same decision rule, ulp-level numerics (DESIGN.md §13);
     unsupported configs fall back to the composed step here rather than
     erroring, so drivers never branch on backend.
+
+    Two optional model hooks extend the protocol (DESIGN.md §17):
+    ``estimate_state(state) -> pytree`` maps the particle state to the
+    quantity whose weighted mean is reported as ``StepOutput.estimate``
+    (needed when the raw state is non-averageable, e.g. token ids plus
+    KV caches), and ``emission(state) -> pytree`` selects the
+    per-particle slice recorded in ``diag["emission"]`` for genealogy
+    reconstruction when ``cfg.record_ancestry`` is set.  Both force the
+    composed path.  A third hook, ``gather_state(state, ancestors) ->
+    state``, overrides the resampling gather for states whose particle
+    axis is not uniformly leading (the LM adapter's scan-stacked KV
+    caches carry it at dim 1).
     """
-    if cfg.step_backend == "fused" and sir_fused.fused_applicable(
-            cfg.resampler):
+    est_fn = getattr(model, "estimate_state", None)
+    emit_fn = getattr(model, "emission", None)
+    gather_fn = getattr(model, "gather_state", None)
+    if (cfg.step_backend == "fused" and sir_fused.fused_applicable(
+            cfg.resampler) and not cfg.record_ancestry
+            and est_fn is None and gather_fn is None):
         return _make_fused_sir_step(model, cfg)
     n = cfg.n_particles
 
@@ -211,16 +245,28 @@ def make_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig):
         ens = particles.advance(ens, k_dyn, model.transition_sample)
         ens = particles.reweight(ens, model.observation_log_prob(ens.state,
                                                                  observation))
-        estimate = particles.weighted_mean(ens)
+        est_ens = ens if est_fn is None else ens.replace(
+            state=est_fn(ens.state))
+        estimate = particles.weighted_mean(est_ens)
 
         dec = ess_resample(k_res, ens.log_weights, ess_frac=cfg.ess_frac,
                            resampler=cfg.resampler,
                            always=cfg.always_resample)
-        state = jax.tree_util.tree_map(lambda x: x[dec.ancestors], ens.state)
+        state = (jax.tree_util.tree_map(lambda x: x[dec.ancestors], ens.state)
+                 if gather_fn is None else gather_fn(ens.state, dec.ancestors))
         # N·max(w): the weight-skew diagnostic the chain-resampler bias
         # gates consume (tests/stats.py ``chain_tv_profile``) — 1 at
         # uniform weights, N at full collapse.
         skew = n * jnp.exp(jnp.max(ens.log_weights) - dec.log_z)
+        diag = {"weight_skew": skew}
+        if cfg.record_ancestry:
+            # pre-gather snapshot: ``ancestors[t]`` maps post-step slots
+            # to the pre-resample particles that produced these leaves
+            # (repro.core.genealogy index convention).
+            diag["emission"] = (ens.state if emit_fn is None
+                                else emit_fn(ens.state))
+            diag["log_weights"] = ens.log_weights - dec.log_z
+        ancestors = dec.ancestors if cfg.record_ancestry else no_ancestors()
         # invariant: logsumexp(lw) == 0 entering every step, so ``log_z`` IS
         # the marginal-likelihood increment log p(z_k | Z^{k-1}).
         lw = jnp.where(dec.resampled,
@@ -228,7 +274,7 @@ def make_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig):
                        ens.log_weights - dec.log_z)
         ens = ens.replace(state=state, log_weights=lw)
         out = StepOutput(estimate, dec.ess, dec.log_z, dec.resampled,
-                         {"weight_skew": skew})
+                         ancestors, diag)
         return SIRCarry(key, ens), out
 
     return step
@@ -256,7 +302,7 @@ def _make_fused_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig):
         state = jax.tree_util.tree_map(lambda x: x[dec.ancestors], ens.state)
         ens = ens.replace(state=state, log_weights=dec.new_log_weights)
         out = StepOutput(dec.estimate, dec.ess, dec.log_z, dec.resampled,
-                         {"weight_skew": dec.weight_skew})
+                         no_ancestors(), {"weight_skew": dec.weight_skew})
         return SIRCarry(key, ens), out
 
     return step
@@ -328,9 +374,11 @@ def make_distributed_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig,
 
         # MMSE estimate with globally normalized weights (one psum)
         w = jnp.exp(jnp.where(jnp.isfinite(lw), lw - glz, -jnp.inf))
+        est_fn = getattr(model, "estimate_state", None)
+        est_state = ens.state if est_fn is None else est_fn(ens.state)
         estimate = jax.tree_util.tree_map(
             lambda x: runtime.psum(jnp.tensordot(w.astype(x.dtype), x, axes=1),
-                                   axis_name), ens.state)
+                                   axis_name), est_state)
 
         do_resample = jnp.logical_or(ess < cfg.ess_frac * n_total,
                                      jnp.asarray(cfg.always_resample))
@@ -362,7 +410,9 @@ def make_distributed_sir_step(model: ssm_base.StateSpaceModel, cfg: SIRConfig,
         ens = jax.tree_util.tree_map(
             lambda a, b: jnp.where(do_resample, a, b), r_ens, kept)
 
-        out = StepOutput(estimate, ess, glz, do_resample,
+        # the DRA paths exchange (state, multiplicity) pairs, not ancestor
+        # indices — genealogy recording is a single-device/bank feature.
+        out = StepOutput(estimate, ess, glz, do_resample, no_ancestors(),
                          {**diag, **mig_diag})
         return SIRCarry(key, ens), out
 

@@ -25,6 +25,16 @@ disables the feature):
 * ``positions(state)`` / ``tile_observation_log_prob(state, slab,
   origin)`` — the spatial hooks for input-space domain decomposition
   (DESIGN.md §10); only meaningful for image-like observations.
+* ``estimate_state(state)`` — maps the particle state to the pytree
+  whose weighted mean is reported as the per-frame estimate; for
+  states the raw mean of which is meaningless (token ids, KV caches —
+  the LM decode adapter, DESIGN.md §17).
+* ``emission(state)`` — the per-particle slice recorded per frame for
+  ``repro.core.genealogy`` trajectory reconstruction when
+  ``SIRConfig(record_ancestry=True)``; defaults to the whole state.
+* ``gather_state(state, ancestors)`` — overrides the resampling gather
+  for state pytrees whose particle axis is not uniformly leading
+  (scan-stacked KV cache groups carry it at dim 1).
 
 ``repro.core.smc.StateSpaceModel`` remains the closure-style
 callable-bundle constructor and implements this protocol by delegation,

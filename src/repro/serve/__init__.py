@@ -12,9 +12,12 @@ from repro.serve.frontend import (FrameResult, FrontendConfig, Handoff,
 from repro.serve.metrics import Metrics
 from repro.serve.sessions import (ParticleSessionServer, SessionHandle,
                                   SuspendedSession)
-from repro.serve.smc_decode import SMCDecodeConfig, smc_decode
+from repro.serve.smc_decode import (LMDecodeSSM, SMCDecodeConfig,
+                                    SMCDecodeResult, smc_decode,
+                                    suspended_decode_session)
 
-__all__ = ["generate", "smc_decode", "SMCDecodeConfig",
+__all__ = ["generate", "smc_decode", "SMCDecodeConfig", "SMCDecodeResult",
+           "LMDecodeSSM", "suspended_decode_session",
            "ParticleSessionServer", "SessionHandle", "SuspendedSession",
            "ParticleFrontend", "FrontendConfig", "FrameResult",
            "StreamHandle", "Handoff", "Metrics",

@@ -470,9 +470,10 @@ class ParticleFrontend:
         self.server.step()
         rows = []
         for st, _, _, _ in work:
-            est, ess, log_z, res = self.server.latest(st._session)
-            rows.append((np.asarray(est), float(ess), float(log_z),
-                         bool(res)))
+            est, ess, log_z, res = self.server.latest(st._session)[:4]
+            # est is already host NumPy (a pytree for models whose
+            # estimate is structured, e.g. the LM decode adapter)
+            rows.append((est, float(ess), float(log_z), bool(res)))
         return rows
 
     # -- slot management (admission control, §15.3) -------------------------

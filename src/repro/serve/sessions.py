@@ -79,9 +79,11 @@ class SuspendedSession:
       log_weights: ``(N,)`` ensemble log-weights.
       counts: ``(N,)`` ensemble multiplicities.
       frames_done: frames filtered before suspension.
-      estimates / ess / log_marginal / resampled: the per-frame output
-        trajectory so far (leading dim ``frames_done``), so ``result``
-        after resume returns the full history.
+      estimates / ess / log_marginal / resampled / ancestors: the
+        per-frame output trajectory so far (leading dim ``frames_done``),
+        so ``result`` after resume returns the full history
+        (``ancestors`` has trailing width 0 unless the server's
+        ``SIRConfig.record_ancestry`` is set).
     """
 
     key_data: np.ndarray
@@ -93,6 +95,7 @@ class SuspendedSession:
     ess: np.ndarray
     log_marginal: np.ndarray
     resampled: np.ndarray
+    ancestors: np.ndarray
 
     def as_tree(self) -> dict:
         """The checkpointable pytree (what ``save``/``load`` round-trip)."""
@@ -102,6 +105,7 @@ class SuspendedSession:
             "frames_done": np.asarray(self.frames_done),
             "estimates": self.estimates, "ess": self.ess,
             "log_marginal": self.log_marginal, "resampled": self.resampled,
+            "ancestors": self.ancestors,
         }
 
     def save(self, directory: str) -> str:
@@ -134,7 +138,8 @@ class SuspendedSession:
                    frames_done=int(tree["frames_done"]),
                    estimates=tree["estimates"], ess=tree["ess"],
                    log_marginal=tree["log_marginal"],
-                   resampled=tree["resampled"])
+                   resampled=tree["resampled"],
+                   ancestors=tree["ancestors"])
 
 
 class _Session:
@@ -450,11 +455,14 @@ class ParticleSessionServer:
     @staticmethod
     def _materialize_row(ref: tuple) -> tuple:
         """Resolve one ``(outs, row)`` reference to host-side
-        ``(estimate, ess, log_marginal, resampled)`` NumPy values."""
+        ``(estimate, ess, log_marginal, resampled, ancestors)`` NumPy
+        values (``ancestors`` has width 0 unless
+        ``SIRConfig.record_ancestry``)."""
         outs, i = ref
         return tuple(jax.tree_util.tree_map(
             lambda x: np.asarray(x[i]),
-            (outs.estimate, outs.ess, outs.log_marginal, outs.resampled)))
+            (outs.estimate, outs.ess, outs.log_marginal, outs.resampled,
+             outs.ancestors)))
 
     def warm_tiers(self, example_frame: Any) -> None:
         """Compile every occupancy-tier step program ahead of traffic.
@@ -500,7 +508,8 @@ class ParticleSessionServer:
 
     def latest(self, handle: SessionHandle) -> tuple | None:
         """The most recent stepped frame's ``(estimate, ess,
-        log_marginal, resampled)`` for the session (host NumPy values),
+        log_marginal, resampled, ancestors)`` for the session (host
+        NumPy values),
         or ``None`` if no frame has been stepped since attach/resume.
 
         This is the streaming accessor the request plane
@@ -530,6 +539,7 @@ class ParticleSessionServer:
             ess=stacked["ess"],
             log_marginal=stacked["log_marginal"],
             resampled=stacked["resampled"],
+            ancestors=stacked["ancestors"],
             diag={},
             final=self._slot_ensemble(sess.slot))
 
@@ -557,7 +567,8 @@ class ParticleSessionServer:
             blank = self.blank_suspended()
             stacked = {"estimates": blank.estimates, "ess": blank.ess,
                        "log_marginal": blank.log_marginal,
-                       "resampled": blank.resampled}
+                       "resampled": blank.resampled,
+                       "ancestors": blank.ancestors}
         sus = SuspendedSession(
             key_data=np.asarray(jax.random.key_data(carry.key)),
             state=jax.tree_util.tree_map(np.asarray, carry.ensemble.state),
@@ -568,6 +579,7 @@ class ParticleSessionServer:
             ess=stacked["ess"],                 # native dtypes: the round
             log_marginal=stacked["log_marginal"],  # -trip stays bitwise
             resampled=stacked["resampled"],        # under x64 too
+            ancestors=stacked["ancestors"],
         )
         self.detach(handle)
         if directory is not None:
@@ -605,6 +617,7 @@ class ParticleSessionServer:
                 "estimates": suspended.estimates, "ess": suspended.ess,
                 "log_marginal": suspended.log_marginal,
                 "resampled": suspended.resampled,
+                "ancestors": suspended.ancestors,
             }
         return handle
 
@@ -637,7 +650,10 @@ class ParticleSessionServer:
             counts=zeros(carry.ensemble.counts),
             frames_done=0, estimates=est, ess=np.zeros((0,), np.float32),
             log_marginal=np.zeros((0,), np.float32),
-            resampled=np.zeros((0,), bool))
+            resampled=np.zeros((0,), bool),
+            ancestors=np.zeros(
+                (0, self.sir.n_particles if self.sir.record_ancestry else 0),
+                np.int32))
 
     # -- internals ----------------------------------------------------------
     def _take_slot(self) -> int:
@@ -671,14 +687,15 @@ class ParticleSessionServer:
         polling costs O(new frames) in transfers (the returned
         full-history arrays are still O(T) memcpy)."""
         if sess.pending:
-            est, ess, log_z, res = zip(*(self._materialize_row(r)
-                                         for r in sess.pending))
+            est, ess, log_z, res, anc = zip(*(self._materialize_row(r)
+                                              for r in sess.pending))
             fresh = {
                 "estimates": jax.tree_util.tree_map(
                     lambda *xs: np.stack(xs), *est),
                 "ess": np.stack(ess),
                 "log_marginal": np.stack(log_z),
                 "resampled": np.stack(res),
+                "ancestors": np.stack(anc),
             }
             sess.pending = []
             sess.stacked = fresh if sess.stacked is None else \

@@ -45,11 +45,25 @@ def chunked_xent(hidden: Array, params: dict, cfg: ArchConfig,
                  unroll: bool = False,
                  logits_dtype: str = "float32") -> Array:
     """Mean cross-entropy over (B, T) targets without materializing
-    (B, T, V) logits.  hidden: (B, T, D); targets: (B, T[, K])."""
+    (B, T, V) logits.  hidden: (B, T, D); targets: (B, T[, K]).
+
+    ``t`` need not divide ``chunk``: the sequence is padded up to the
+    next chunk boundary and the padded positions are masked out of every
+    loss term, so any prompt length works.  ``logits_dtype`` is always
+    honored for the materialized chunk logits (the HBM-traffic knob);
+    the logsumexp AND the gathered target logit are then reduced from
+    one f32 upcast of those logits, so the per-token term
+    ``lse − tgt`` is consistent in f32 whatever the storage dtype.
+    """
     b, t, d = hidden.shape
     chunk = min(chunk, t)
-    assert t % chunk == 0
-    n_chunks = t // chunk
+    n_chunks = -(-t // chunk)
+    n_tok = b * t * (cfg.n_codebooks if cfg.n_codebooks > 1 else 1)
+    pad = n_chunks * chunk - t
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(
+            targets, ((0, 0), (0, pad)) + ((0, 0),) * (targets.ndim - 2))
 
     def body(acc, i):
         h_c = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
@@ -58,20 +72,22 @@ def chunked_xent(hidden: Array, params: dict, cfg: ArchConfig,
         # T slice so the (huge) logits can take the vocab-sharded layout
         h_c = constrain(h_c, "act")
         logits = M.unembed(params, cfg, h_c)
-        if logits_dtype == "float32":
-            logits = logits.astype(jnp.float32)
-        # reduce in f32 regardless of the materialized logits dtype
-        lse = jax.scipy.special.logsumexp(
-            logits.astype(jnp.float32), axis=-1)
-        tgt = jnp.take_along_axis(logits, y_c[..., None],
-                                  axis=-1)[..., 0].astype(jnp.float32)
-        loss = jnp.sum(lse - tgt) + z_loss * jnp.sum(jnp.square(lse))
+        logits = logits.astype(jnp.dtype(logits_dtype))
+        # reduce in f32 regardless of the materialized logits dtype —
+        # target gather included, from the same upcast the lse uses
+        logits32 = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits32, axis=-1)
+        tgt = jnp.take_along_axis(logits32, y_c[..., None],
+                                  axis=-1)[..., 0]
+        valid = (i * chunk + jnp.arange(chunk)) < t        # remainder mask
+        m = valid.reshape((1, chunk) + (1,) * (lse.ndim - 2))
+        loss = (jnp.sum(jnp.where(m, lse - tgt, 0.0))
+                + z_loss * jnp.sum(jnp.where(m, jnp.square(lse), 0.0)))
         return acc + loss, None
 
     body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
     total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
                             jnp.arange(n_chunks), unroll=unroll)
-    n_tok = b * t * (cfg.n_codebooks if cfg.n_codebooks > 1 else 1)
     return total / n_tok
 
 

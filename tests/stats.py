@@ -66,6 +66,33 @@ def log_marginal_bound(n_steps: int, n_particles: int,
     return float(slack * np.sqrt(n_steps / n_particles))
 
 
+def importance_mean_bound(variance: float, n: int,
+                          sigma: float = 5.0,
+                          floor: float = 1e-3) -> float:
+    """5-sigma CLT gate on the mean of ``n`` iid importance-weighted
+    draws whose per-draw variance is known *exactly* (brute-force
+    enumeration over a tiny vocabulary makes that possible for the SMC
+    decoder: ``Var[w] = E_q[w²] − 1`` for the normalizer, ``Var[ŵ_v] =
+    p_v²/q_v − p_v²`` for a next-token posterior mass).  ``floor``
+    keeps the gate meaningful when the exact variance is so small that
+    float32 accumulation noise would dominate the bound."""
+    return float(max(sigma * np.sqrt(max(variance, 0.0) / n), floor))
+
+
+def smoother_mean_bound(kalman_smooth_covs, n_particles: int,
+                        slack: float = CLT_SLACK) -> float:
+    """CLT bound on RMSE(genealogy smoother mean, Kalman *smoother*
+    mean): same shape as ``pf_mean_bound`` but over the smoothed
+    covariances P_{t|T}.  The filter-smoother's asymptotic variance
+    additionally degrades with path degeneracy (ancestral coalescence),
+    which the shared ``slack`` absorbs at the tested T/N regimes — the
+    tests also gate the *qualitative* property that smoothing beats
+    filtering against the oracle, which no slack can fake."""
+    tr = np.trace(np.asarray(kalman_smooth_covs, np.float64),
+                  axis1=-2, axis2=-1)
+    return float(slack * np.sqrt(tr.mean() / n_particles))
+
+
 def ess_sane(ess, n_particles: int) -> None:
     """Assert every per-step ESS lies in its mathematical range
     [1, N] (N_eff = 1/Σw² with normalized weights), with a float32

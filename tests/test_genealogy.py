@@ -1,0 +1,150 @@
+"""Ancestral genealogy: trajectory reconstruction + particle smoothing
+(``repro.core.genealogy``, DESIGN.md §17).
+
+Two kinds of gates:
+
+* **Structural** — reconstruction equals an independent NumPy replay of
+  the resample-gathered history buffer (bitwise); fixed-lag at
+  ``lag=0`` reproduces the filtering means and at ``lag >= T-1`` the
+  filter-smoother exactly; identity ancestry when resampling never
+  fires.
+* **Statistical** — the genealogy filter-smoother tracks the float64
+  ``kalman_smoother`` oracle within a CLT bound
+  (``stats.smoother_mean_bound``) AND beats the filtering means against
+  that same oracle — the qualitative property no slack can fake.
+  Tier-1 runs N=4096; ``-m slow`` repeats at N=1e5 where the bound is
+  ~5× tighter.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import stats
+
+from repro.core import SIRConfig, genealogy, run_sir
+from repro.models import ssm
+
+N_STEPS = 24
+SEEDS = {"ar1": 11, "spiral": 13}
+# smoother-mean CLT slacks: the filter calibration (tests/test_ssm_oracle)
+# plus headroom for path-degeneracy variance inflation at T=24
+SMOOTH_SLACKS = {"ar1": 14.0, "spiral": 16.0}
+
+
+def _run_recorded(name: str, n_particles: int, ess_frac: float = 0.9,
+                  n_steps: int = N_STEPS):
+    model = ssm.oracle_configs()[name]
+    k_sim, k_run = jax.random.split(jax.random.key(SEEDS[name]))
+    _, zs = ssm.simulate(k_sim, model, n_steps)
+    cfg = SIRConfig(n_particles=n_particles, ess_frac=ess_frac,
+                    record_ancestry=True)
+    carry, outs = run_sir(k_run, model, cfg, np.asarray(zs))
+    return model, np.asarray(zs), carry, outs
+
+
+def test_reconstruction_matches_replayed_history_buffer():
+    """``reconstruct_trajectories`` must be bit-identical to what an
+    in-state history buffer (written per step, resample-gathered with
+    the state) holds at the end of the run — the exact mechanism
+    ``smc_decode`` uses for its token sequences."""
+    _, _, _, outs = _run_recorded("ar1", n_particles=64)
+    anc = np.asarray(outs.ancestors)                    # (T, N)
+    emis = np.asarray(outs.diag["emission"])            # (T, N, d)
+    t_steps, n = anc.shape
+
+    buf = np.zeros((n, t_steps) + emis.shape[2:], emis.dtype)
+    for t in range(t_steps):
+        buf[:, t] = emis[t]             # write pre-resample emission
+        buf = buf[anc[t]]               # gather the WHOLE history
+    paths = genealogy.reconstruct_trajectories(outs.ancestors,
+                                               outs.diag["emission"])
+    np.testing.assert_array_equal(np.asarray(paths), buf)
+    assert int(np.sum(anc != np.arange(n))) > 0, "no resampling exercised"
+
+
+def test_identity_ancestry_without_resampling():
+    """ess_frac=0 never fires the trigger: every recorded ancestor row
+    is the identity and reconstruction is a pure transpose."""
+    _, _, _, outs = _run_recorded("ar1", n_particles=32, ess_frac=0.0)
+    anc = np.asarray(outs.ancestors)
+    np.testing.assert_array_equal(
+        anc, np.broadcast_to(np.arange(anc.shape[1]), anc.shape))
+    paths = genealogy.reconstruct_trajectories(outs.ancestors,
+                                               outs.diag["emission"])
+    np.testing.assert_array_equal(
+        np.asarray(paths), np.asarray(outs.diag["emission"]).swapaxes(0, 1))
+
+
+def test_fixed_lag_endpoint_identities():
+    """lag=0 reproduces the filtering means; lag >= T-1 reproduces the
+    filter-smoother; negative lag raises."""
+    _, _, _, outs = _run_recorded("spiral", n_particles=256)
+    emis = outs.diag["emission"]
+    lws = outs.diag["log_weights"]
+
+    lag0 = genealogy.fixed_lag_smoother_mean(outs.ancestors, emis, lws, 0)
+    np.testing.assert_allclose(np.asarray(lag0), np.asarray(outs.estimate),
+                               rtol=1e-5, atol=1e-5)
+
+    full = genealogy.filter_smoother_mean(outs.ancestors, emis, lws[-1])
+    for lag in (N_STEPS - 1, N_STEPS + 5):
+        lagged = genealogy.fixed_lag_smoother_mean(outs.ancestors, emis,
+                                                   lws, lag)
+        np.testing.assert_allclose(np.asarray(lagged), np.asarray(full),
+                                   rtol=0, atol=1e-6)
+
+    with pytest.raises(ValueError):
+        genealogy.fixed_lag_smoother_mean(outs.ancestors, emis, lws, -1)
+
+
+def test_single_frame_degenerates_to_filtering():
+    """T=1: smoothing == filtering, and the T==1 branch of
+    ``smoothing_lineage`` is exercised."""
+    _, _, _, outs = _run_recorded("ar1", n_particles=32, n_steps=1)
+    rows = genealogy.smoothing_lineage(outs.ancestors)
+    np.testing.assert_array_equal(np.asarray(rows), np.arange(32)[None])
+    sm = genealogy.filter_smoother_mean(
+        outs.ancestors, outs.diag["emission"], outs.diag["log_weights"][-1])
+    np.testing.assert_allclose(np.asarray(sm), np.asarray(outs.estimate),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _check_smoother_oracle(name: str, n_particles: int):
+    model, zs, _, outs = _run_recorded(name, n_particles)
+    oracle = ssm.kalman_smoother(model, zs)
+    slack = SMOOTH_SLACKS[name]
+
+    sm = genealogy.filter_smoother_mean(
+        outs.ancestors, outs.diag["emission"], outs.diag["log_weights"][-1])
+    bound = stats.smoother_mean_bound(oracle.covs, n_particles, slack=slack)
+    spread = float(np.sqrt(np.trace(np.asarray(oracle.covs, np.float64),
+                                    axis1=-2, axis2=-1).mean()))
+    assert bound < spread, "vacuous bound: raise N"
+    err = stats.rmse(sm, oracle.means)
+    assert err <= bound, (f"{name}: smoother drifted from Kalman smoother: "
+                          f"rmse {err:.4g} > bound {bound:.4g}")
+
+    # smoothing must beat filtering against the SMOOTHED oracle — the
+    # future-evidence gain, unforgeable by slack tuning
+    filt_err = stats.rmse(outs.estimate, oracle.means)
+    assert err < filt_err, (name, err, filt_err)
+
+    # a moderate fixed-lag window sits between filter and smoother: its
+    # truncation bias is O(1) in N (no CLT gate at large N), but it uses
+    # strictly more future evidence per frame than filtering does
+    lag = genealogy.fixed_lag_smoother_mean(
+        outs.ancestors, outs.diag["emission"], outs.diag["log_weights"], 8)
+    lag_err = stats.rmse(lag, oracle.means)
+    assert lag_err < filt_err, (name, lag_err, filt_err)
+
+
+@pytest.mark.parametrize("name", sorted(SEEDS))
+def test_smoother_tracks_kalman_smoother(name):
+    _check_smoother_oracle(name, n_particles=4096)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(SEEDS))
+def test_smoother_tracks_kalman_smoother_large_n(name):
+    """Same gates at N=1e5 — a ~5× tighter absolute bound."""
+    _check_smoother_oracle(name, n_particles=100_000)

@@ -1,11 +1,34 @@
-"""Serving layer: batched generation + SMC particle decoding."""
+"""Serving layer: batched generation + SMC particle decoding.
+
+The SMC decoding tests pin the PR-10 bugfix contract:
+
+* the prefill-sampled first token is kept AND weighted (closed-form
+  parity against an independent recomputation of the prefill draw);
+* returned sequences are root-to-leaf paths of the recorded ancestry
+  (``repro.core.genealogy`` is the oracle);
+* ``log_z`` is the full normalizer (every step's increment, no
+  resample-event-only accounting) — gated for unbiasedness against
+  brute-force enumeration on a tiny-vocab config;
+* the weighted next-token posterior matches the exact softmax to
+  5 sigma (tests/stats.py ``importance_mean_bound``);
+* session-hosted decoding (``suspended_decode_session`` +
+  ``ParticleSessionServer``) bitwise-reproduces the standalone
+  ``smc_decode`` for the same keys.
+"""
+import dataclasses
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import stats
 from repro.configs import get_config
+from repro.core import genealogy
 from repro.models.lm import model as M
-from repro.serve import SMCDecodeConfig, generate, smc_decode
+from repro.serve import (LMDecodeSSM, SMCDecodeConfig, generate, smc_decode,
+                         suspended_decode_session)
+from repro.serve.sessions import ParticleSessionServer
 
 KEY = jax.random.key(0)
 
@@ -25,21 +48,218 @@ def test_smc_decode_shapes_and_normalizer():
     params = M.init_params(KEY, cfg)
     prompt = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
     smc = SMCDecodeConfig(n_particles=4, steps=8)
-    seqs, lw, log_z, ess = smc_decode(params, cfg, prompt, smc, key=KEY)
-    assert seqs.shape == (2, 4, 8)
-    assert lw.shape == (2, 4)
-    assert bool(jnp.isfinite(log_z).all())
-    assert float(ess.min()) >= 1.0 - 1e-5
-    assert float(ess.max()) <= 4.0 + 1e-5
+    res = smc_decode(params, cfg, prompt, smc, key=KEY)
+    assert res.sequences.shape == (2, 4, 8)
+    assert res.log_weights.shape == (2, 4)
+    assert res.log_z.shape == (2,)
+    assert res.ess.shape == (8, 2)
+    assert res.log_marginal.shape == (8, 2)
+    assert res.resampled.shape == (8, 2)
+    assert res.ancestors.shape == (8, 2, 4)
+    assert res.emissions.shape == (8, 2, 4)
+    assert bool(jnp.isfinite(res.log_z).all())
+    stats.ess_sane(np.asarray(res.ess), 4)
+    # log_z is the SUM of per-step increments — prefill row included
+    np.testing.assert_allclose(np.asarray(res.log_z),
+                               np.asarray(res.log_marginal.sum(0)),
+                               rtol=1e-5, atol=1e-5)
+    # returned log-weights are normalized (shared SIR convention)
+    lse = jax.scipy.special.logsumexp(res.log_weights, axis=-1)
+    np.testing.assert_allclose(np.asarray(lse), 0.0, atol=1e-5)
 
 
 def test_smc_tau1_keeps_uniform_weights():
     """With proposal == target (τ=1) importance weights stay exactly
-    uniform — no resampling should ever trigger."""
+    uniform — no resampling should ever trigger and every increment
+    (the prefill draw's included) is exactly 0."""
     cfg = get_config("stablelm-3b", smoke=True)
     params = M.init_params(KEY, cfg)
     prompt = jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
     smc = SMCDecodeConfig(n_particles=4, steps=6, proposal_temperature=1.0)
-    _, lw, log_z, ess = smc_decode(params, cfg, prompt, smc, key=KEY)
-    np.testing.assert_allclose(np.asarray(ess), 4.0, atol=1e-3)
-    np.testing.assert_allclose(np.asarray(log_z), 0.0, atol=1e-4)
+    res = smc_decode(params, cfg, prompt, smc, key=KEY)
+    np.testing.assert_allclose(np.asarray(res.ess), 4.0, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(res.log_z), 0.0, atol=1e-4)
+    assert not bool(res.resampled.any())
+
+
+def _prefill_draw_reference(params, cfg, model, prompt_row, key):
+    """Independent recomputation of the prefill first-token draw: the
+    exact distribution + the exact categorical draw of ``prefill_state``
+    under ``decode_carry``'s key split."""
+    dec = model.decode
+    k_init, _ = jax.random.split(key)
+    rep = jnp.broadcast_to(prompt_row, (dec.n_particles,) + prompt_row.shape)
+    h_last, _, _ = M.forward_prefill(params, cfg, rep, max_len=model.max_len)
+    logits = M.unembed(M.cast_params(params, cfg), cfg,
+                       h_last)[:, 0].astype(jnp.float32)
+    p_log = jax.nn.log_softmax(logits, axis=-1)
+    q_log = jax.nn.log_softmax(logits / dec.proposal_temperature, -1)
+    first = jax.random.categorical(k_init, q_log, axis=-1).astype(jnp.int32)
+    pick = lambda lp: jnp.take_along_axis(  # noqa: E731
+        lp, first[:, None], -1)[:, 0]
+    inc0 = pick(p_log) - pick(q_log)
+    log_z0 = jax.scipy.special.logsumexp(inc0 - jnp.log(float(
+        dec.n_particles)))
+    return first, log_z0, p_log[0], q_log[0]
+
+
+def test_first_token_is_kept_and_weighted():
+    """PR-10 satellite 1: the prefill-sampled first token must appear in
+    the returned sequences AND contribute its ``p₀ − q₀`` importance
+    increment to ``log_z`` — exact parity against an independent
+    recomputation (the historical code dropped both)."""
+    cfg = get_config("qwen3-32b", smoke=True)
+    params = M.init_params(KEY, cfg)
+    t0 = 12
+    prompt = jax.random.randint(KEY, (1, t0), 0, cfg.vocab_size)
+    smc = SMCDecodeConfig(n_particles=4, steps=1, proposal_temperature=1.7)
+    res = smc_decode(params, cfg, prompt, smc, key=KEY)
+
+    model = LMDecodeSSM(params=params, cfg=cfg, decode=smc, prompt_len=t0)
+    key_row = jax.random.split(KEY, 1)[0]
+    first, log_z0, _, _ = _prefill_draw_reference(
+        params, cfg, model, prompt[0], key_row)
+    assert res.sequences.shape == (1, 4, 1)
+    np.testing.assert_array_equal(np.asarray(res.sequences[0, :, 0]),
+                                  np.asarray(first))
+    np.testing.assert_allclose(float(res.log_z[0]), float(log_z0),
+                               rtol=0, atol=1e-6)
+    # the prefill row is a full SMC step in the traces
+    np.testing.assert_array_equal(np.asarray(res.ancestors[0, 0]),
+                                  np.arange(4))
+    assert not bool(res.resampled[0, 0])
+
+
+def test_sequences_are_ancestral_paths():
+    """PR-10 satellite 2: after resampling, returned sequences must be
+    root-to-leaf paths of the recorded genealogy — the historical code
+    returned lineage-incoherent rows (each row its own slot history)."""
+    cfg = get_config("qwen3-32b", smoke=True)
+    params = M.init_params(KEY, cfg)
+    prompt = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    smc = SMCDecodeConfig(n_particles=4, steps=8, proposal_temperature=2.0,
+                          ess_frac=0.9)
+    res = smc_decode(params, cfg, prompt, smc, key=KEY)
+    assert int(res.resampled.sum()) > 0, "config must exercise resampling"
+    for i in range(2):
+        paths = genealogy.reconstruct_trajectories(
+            res.ancestors[:, i], res.emissions[:, i])       # (K, steps)
+        np.testing.assert_array_equal(np.asarray(res.sequences[i]),
+                                      np.asarray(paths))
+
+
+def test_session_hosted_decode_bitwise_matches_standalone():
+    """Tentpole acceptance: per-prompt decoding hosted as resident
+    ``ParticleSessionServer`` sessions reproduces the standalone
+    ``smc_decode`` BITWISE for the same keys — every field."""
+    cfg = get_config("qwen3-32b", smoke=True)
+    params = M.init_params(KEY, cfg)
+    b = 2
+    prompt = jax.random.randint(KEY, (b, 16), 0, cfg.vocab_size)
+    smc = SMCDecodeConfig(n_particles=4, steps=6, proposal_temperature=2.0,
+                          ess_frac=0.9)
+    res = smc_decode(params, cfg, prompt, smc, key=KEY)
+
+    model = LMDecodeSSM(params=params, cfg=cfg, decode=smc, prompt_len=16)
+    server = ParticleSessionServer(model=model, sir=smc.sir(), capacity=b)
+    keys = jax.random.split(KEY, b)
+    handles = [server.resume(suspended_decode_session(model, keys[i],
+                                                      prompt[i]))
+               for i in range(b)]
+    for t in range(1, smc.steps):
+        for h in handles:
+            server.submit(h, np.float32(t))
+        server.step()
+    for i, h in enumerate(handles):
+        r = server.result(h)
+        np.testing.assert_array_equal(
+            np.asarray(r.final.state["tokens"]),
+            np.asarray(res.sequences[i]))
+        np.testing.assert_array_equal(np.asarray(r.final.log_weights),
+                                      np.asarray(res.log_weights[i]))
+        np.testing.assert_array_equal(np.asarray(r.log_marginal),
+                                      np.asarray(res.log_marginal[:, i]))
+        np.testing.assert_array_equal(np.asarray(r.ess),
+                                      np.asarray(res.ess[:, i]))
+        np.testing.assert_array_equal(np.asarray(r.ancestors),
+                                      np.asarray(res.ancestors[:, i]))
+        np.testing.assert_array_equal(np.asarray(r.resampled),
+                                      np.asarray(res.resampled[:, i]))
+
+
+def _tiny_vocab_setup(v=6, t0=4):
+    """A brute-force-enumerable decode problem: tiny vocabulary, f32
+    compute (so enumeration and decode numerics agree)."""
+    cfg = dataclasses.replace(get_config("qwen3-32b", smoke=True),
+                              vocab_size=v, compute_dtype="float32")
+    params = M.init_params(KEY, cfg)
+    prompt = jax.random.randint(KEY, (1, t0), 0, v)
+    return cfg, params, prompt
+
+
+def test_log_z_unbiased_vs_enumeration():
+    """PR-10 satellite 3: ``E[exp(log_z)] = 1`` (no resampling, τ ≠ 1).
+    The historical code only folded normalizer mass at resample events,
+    dropping the residual unnormalized tail — which biases exp(log_z)
+    whenever the final weights are non-uniform.  Gate: replicate mean of
+    exp(log_z) against 1 at 5 sigma, with the per-draw variance
+    E_q[w²] − 1 computed EXACTLY by teacher-forced enumeration of all
+    V^steps continuations."""
+    v, t0, steps, k_part, reps = 6, 4, 3, 64, 8
+    cfg, params, prompt = _tiny_vocab_setup(v, t0)
+    smc = SMCDecodeConfig(n_particles=k_part, steps=steps,
+                          proposal_temperature=2.0, ess_frac=0.0)
+    zs = []
+    for r in range(reps):
+        res = smc_decode(params, cfg, prompt, smc, key=jax.random.key(100 + r))
+        assert not bool(res.resampled.any())        # ess_frac=0: never
+        zs.append(np.exp(np.float64(res.log_z[0])))
+
+    # brute-force: every continuation, teacher-forced in one batch
+    seqs = np.array(list(itertools.product(range(v), repeat=steps)),
+                    np.int32)                               # (V^steps, steps)
+    full = np.concatenate(
+        [np.tile(np.asarray(prompt), (len(seqs), 1)), seqs], axis=1)
+    hidden, _ = M.forward_train(params, cfg, jnp.asarray(full))
+    logits = M.unembed(M.cast_params(params, cfg), cfg,
+                       hidden)[:, t0 - 1:t0 + steps - 1].astype(jnp.float32)
+    p_log = np.asarray(jax.nn.log_softmax(logits, -1), np.float64)
+    q_log = np.asarray(jax.nn.log_softmax(
+        logits / smc.proposal_temperature, -1), np.float64)
+    rows = np.arange(len(seqs))[:, None]
+    cols = np.arange(steps)[None, :]
+    lp = p_log[rows, cols, seqs].sum(-1)
+    lq = q_log[rows, cols, seqs].sum(-1)
+    assert abs(np.exp(lq).sum() - 1.0) < 1e-6       # enumeration is complete
+    e_w2 = float(np.sum(np.exp(lq) * np.exp(lp - lq) ** 2))
+
+    bound = stats.importance_mean_bound(e_w2 - 1.0, reps * k_part)
+    err = abs(float(np.mean(zs)) - 1.0)
+    assert err < bound, (err, bound, e_w2)
+
+
+def test_next_token_posterior_matches_softmax():
+    """PR-10 satellite 5: the importance-weighted next-token posterior
+    must match the exact softmax enumeration — per-token 5-sigma gates
+    with the exact estimator variance (p_v²/q_v − p_v²)/K."""
+    v, t0, k_part = 6, 4, 1024
+    cfg, params, prompt = _tiny_vocab_setup(v, t0)
+    smc = SMCDecodeConfig(n_particles=k_part, steps=1,
+                          proposal_temperature=2.5)
+    res = smc_decode(params, cfg, prompt, smc, key=KEY)
+    toks = np.asarray(res.sequences[0, :, 0])
+    # unnormalized weights w_k/K: sum_k = exp(log_z)
+    w = np.exp(np.asarray(res.log_weights[0], np.float64)
+               + np.float64(res.log_z[0]))
+    p_hat = np.array([w[toks == t].sum() for t in range(v)])
+
+    model = LMDecodeSSM(params=params, cfg=cfg, decode=smc, prompt_len=t0)
+    key_row = jax.random.split(KEY, 1)[0]
+    _, _, p_log, q_log = _prefill_draw_reference(
+        params, cfg, model, prompt[0], key_row)
+    p = np.exp(np.asarray(p_log, np.float64))
+    q = np.exp(np.asarray(q_log, np.float64))
+    for t in range(v):
+        bound = stats.importance_mean_bound(
+            p[t] ** 2 / q[t] - p[t] ** 2, k_part)
+        assert abs(p_hat[t] - p[t]) < bound, (t, p_hat[t], p[t], bound)

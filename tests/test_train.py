@@ -57,6 +57,57 @@ def test_grad_accumulation_matches_full_batch():
                                    rtol=2e-3, atol=2e-5)
 
 
+def test_chunked_xent_remainder_chunk():
+    """t need not divide the chunk: compare odd-t chunked loss against a
+    dense full-logits reference (the historical code hard-asserted
+    ``t % chunk == 0``)."""
+    from repro.train.step import chunked_xent
+    cfg = get_config("stablelm-3b", smoke=True)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    params = M.init_params(KEY, cfg)
+    b, t, z_loss = 2, 13, 1e-4
+    batch = make_batch(0, 0, cfg, b, t)
+    hidden, _ = M.forward_train(params, cfg, batch["tokens"])
+    cast = M.cast_params(params, cfg)
+
+    logits = M.unembed(cast, cfg, hidden).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, batch["targets"][..., None],
+                              axis=-1)[..., 0]
+    ref = float((jnp.sum(lse - tgt)
+                 + z_loss * jnp.sum(jnp.square(lse))) / (b * t))
+
+    for chunk in (4, 5, 13, 64):   # remainder, remainder, exact, clamp
+        got = float(chunked_xent(hidden, cast, cfg, batch["targets"],
+                                 chunk, z_loss))
+        np.testing.assert_allclose(got, ref, rtol=1e-5,
+                                   err_msg=f"chunk={chunk}")
+
+
+def test_chunked_xent_bf16_logits_dtype():
+    """xent_logits_dtype='bfloat16' must actually materialize bf16 chunk
+    logits (historically silently ignored) while still reducing the
+    lse − target term in f32 — close to the f32 loss, not equal."""
+    from repro.train.step import chunked_xent
+    cfg = get_config("stablelm-3b", smoke=True)
+    import dataclasses
+    # f32 compute so the two logits_dtype paths actually diverge
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    params = M.init_params(KEY, cfg)
+    b, t = 2, 13
+    batch = make_batch(0, 0, cfg, b, t)
+    hidden, _ = M.forward_train(params, cfg, batch["tokens"])
+    cast = M.cast_params(params, cfg)
+    f32 = float(chunked_xent(hidden, cast, cfg, batch["targets"], 4, 1e-4,
+                             logits_dtype="float32"))
+    bf16 = float(chunked_xent(hidden, cast, cfg, batch["targets"], 4, 1e-4,
+                              logits_dtype="bfloat16"))
+    assert np.isfinite(bf16)
+    assert bf16 != f32          # the knob does something now
+    assert abs(bf16 - f32) < 0.05 * abs(f32) + 1e-2
+
+
 def test_lr_schedule():
     cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=110,
                     schedule="cosine", min_lr_frac=0.1)
